@@ -1,0 +1,70 @@
+"""Shared benchmark plumbing: trace cache, CSV output, claim checks."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import traces
+
+CACHE = pathlib.Path(__file__).resolve().parent / "_cache"
+FIGS = CACHE / "figs"
+GIB = 1 << 30
+
+_TRACE_CACHE: Dict = {}
+
+# Paper's four index workloads (Table 2) + server workload.
+W4 = ("bst_external", "bst_internal", "hash_table", "skip_list")
+
+
+def trace(workload: str, *, n_ops: int = 40_000, seed: int = 0,
+          footprint_bytes: int = 128 * GIB, max_accesses: int = 1_400_000):
+    key = (workload, n_ops, seed, footprint_bytes, max_accesses)
+    if key not in _TRACE_CACHE:
+        _TRACE_CACHE[key] = traces.generate(
+            workload, n_ops=n_ops, seed=seed,
+            footprint_bytes=footprint_bytes, max_accesses=max_accesses,
+        )
+    return _TRACE_CACHE[key]
+
+
+class Claim:
+    """A checked reproduction claim (paper §7), printed and persisted."""
+
+    def __init__(self, name: str, desc: str, value: float, band: tuple, unit: str = ""):
+        self.name, self.desc, self.value, self.band, self.unit = name, desc, value, band, unit
+        self.ok = band[0] <= value <= band[1]
+
+    def row(self) -> dict:
+        return {
+            "claim": self.name, "description": self.desc,
+            "value": self.value, "band": list(self.band),
+            "unit": self.unit, "ok": self.ok,
+        }
+
+    def __str__(self):
+        mark = "PASS" if self.ok else "MISS"
+        return (f"[{mark}] {self.name}: {self.value:.3g}{self.unit} "
+                f"(band {self.band[0]:.3g}..{self.band[1]:.3g}) — {self.desc}")
+
+
+def save_fig(name: str, payload: dict):
+    FIGS.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload)
+    payload["_written_at"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    (FIGS / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
+
+
+def load_fig(name: str):
+    p = FIGS / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def print_csv(title: str, header: List[str], rows: List[list]):
+    print(f"\n# {title}")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(f"{x:.4g}" if isinstance(x, float) else str(x) for x in r))

@@ -1,0 +1,72 @@
+"""Fig 4: TLB miss ratio vs TLB size — conventional vs SPARTA-4 / SPARTA-128,
+4 KB and 2 MB pages, 128 GB working sets.
+
+Claims (C2): memory-side TLBs need ~4x fewer entries than conventional
+accelerator-side TLBs for the same miss ratio; SPARTA-128 + 2 MB with a
+handful of entries beats conventional 2048-entry TLBs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Claim, W4, print_csv, save_fig, trace
+from repro.core import tlbsim
+
+SIZES = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048)
+CONFIGS = (  # (label, partitions, page_shift)
+    ("conv-4K", 1, 12),
+    ("conv-2M", 1, 21),
+    ("sparta4-4K", 4, 12),
+    ("sparta4-2M", 4, 21),
+    ("sparta128-4K", 128, 12),
+    ("sparta128-2M", 128, 21),
+)
+
+
+def _match_size(sizes, curve, target_miss):
+    """Smallest TLB size achieving miss <= target."""
+    for s, m in zip(sizes, curve):
+        if m <= target_miss:
+            return s
+    return None
+
+
+def run(quick: bool = False):
+    n_ops = 10_000 if quick else 40_000
+    sizes = SIZES[:7] if quick else SIZES
+    results = {}
+    rows = []
+    for w in W4:
+        tr = trace(w, n_ops=n_ops)
+        for label, parts, shift in CONFIGS:
+            curve = tlbsim.miss_ratio_curve(
+                tr.lines, sizes, num_partitions=parts, page_shift=shift,
+            )
+            results[f"{w}/{label}"] = list(map(float, curve))
+            rows.append([w, label] + list(map(float, curve)))
+
+    # C2a: entries ratio conventional/memory-side for equal miss (4K pages).
+    ratios = []
+    for w in W4:
+        conv = results[f"{w}/conv-4K"]
+        sp = results[f"{w}/sparta4-4K"]
+        for s, m in zip(sizes, conv):
+            match = _match_size(sizes, sp, m)
+            if match and match < s:
+                ratios.append(s / match)
+    c2a = Claim("C2a", "conventional needs ~4x the entries of SPARTA memory-side TLBs (mean)",
+                float(np.mean(ratios)) if ratios else 0.0, (2.0, 64.0), "x")
+
+    # C2b: SPARTA-128 2M @ 4 entries vs conventional @ 2048 entries (4K & 2M).
+    wins = 0
+    for w in W4:
+        best_conv = min(results[f"{w}/conv-4K"][-1], results[f"{w}/conv-2M"][-1])
+        if results[f"{w}/sparta128-2M"][0] <= best_conv + 1e-9:
+            wins += 1
+    c2b = Claim("C2b", "SPARTA-128+2MB with 4 entries beats conventional 2048 entries (workloads won)",
+                float(wins), (3, 4), "/4")
+
+    print_csv("Fig4 miss ratio vs entries", ["workload", "config"] + [str(s) for s in sizes], rows)
+    print(c2a); print(c2b)
+    save_fig("fig4", {"sizes": sizes, "results": results,
+                      "claims": [c2a.row(), c2b.row()]})
+    return [c2a, c2b]

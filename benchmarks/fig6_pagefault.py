@@ -1,0 +1,63 @@
+"""Fig 6: page-fault rate vs available memory — 1 node vs 32 partitions.
+
+RocksDB (16 GB footprint) under exact-LRU demand paging.  Claims (C4): the
+kernel handles out-of-memory demand paging under partitioning, and the
+32-node curve tracks the 1-node curve with a ~1.5-2 GB offset (the Linux
+NUMA-node overhead artifact, modelled as per-node reserve + capacity
+jitter)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Claim, GIB, print_csv, save_fig, trace
+from repro.core import pagetable
+
+MEM_FRACS = (0.75, 0.81, 0.88, 0.94, 0.97, 1.0, 1.03, 1.06, 1.12)  # x working set
+PAGE = 4096
+NODE_OVERHEAD_FRAC = 0.003     # per-node reserve as a fraction of the dataset
+                               # (Linux zone overhead, ~47MB/node at 16GB scale)
+JITTER = 0.04
+
+
+def run(quick: bool = False):
+    n_ops = 30_000 if quick else 120_000
+    tr = trace("rocksdb", n_ops=n_ops, footprint_bytes=16 * GIB, max_accesses=2_000_000)
+    vpns = tr.vpns(12)
+    # Dedupe consecutive repeats (page-level stream).
+    keep = np.concatenate([[True], vpns[1:] != vpns[:-1]])
+    vpns = vpns[keep]
+
+    # The synthetic trace touches a working set smaller than the nominal
+    # 16 GB footprint; sweep memory around the OBSERVED working set and
+    # report the offset scaled to the paper's 16 GB axis.
+    unique = int(np.unique(vpns).size)
+    frames = [max(32, int(fr * unique)) for fr in MEM_FRACS]
+    overhead = max(1, int(NODE_OVERHEAD_FRAC * unique))
+    c1 = pagetable.page_fault_curve(vpns, frames)
+    c32 = pagetable.page_fault_curve(
+        vpns, frames, num_partitions=32,
+        node_overhead_frames=overhead, node_capacity_jitter=JITTER,
+    )
+
+    # Offset: extra memory the 32-node setup needs for the 1-node fault rate
+    # at 0.94x working set, in 16GB-footprint-equivalent GB.
+    ref_idx = MEM_FRACS.index(0.94)
+    target = c1[ref_idx]
+    need = None
+    for fr, f in zip(MEM_FRACS, c32):
+        if f <= target:
+            need = fr
+            break
+    offset = (need - MEM_FRACS[ref_idx]) * 16.0 if need else float("nan")
+    MEM_GB = [fr * 16.0 for fr in MEM_FRACS]
+    c4a = Claim("C4a", "demand paging works when partitioned (32-node faults finite & decreasing)",
+                float(c32[0] - c32[-1]), (0.0, 1.0), "")
+    c4b = Claim("C4b", "32-node needs ~1.5-2GB extra memory for equal fault rate",
+                float(offset), (0.25, 3.0), "GB")
+    rows = [["1-node"] + list(map(float, c1)), ["32-node"] + list(map(float, c32))]
+    print_csv("Fig6 fault rate vs memory (GB)", ["config"] + [str(g) for g in MEM_GB], rows)
+    print(c4a); print(c4b)
+    save_fig("fig6", {"mem_gb": MEM_GB, "curve_1": list(map(float, c1)),
+                      "curve_32": list(map(float, c32)),
+                      "claims": [c4a.row(), c4b.row()]})
+    return [c4a, c4b]

@@ -1,0 +1,37 @@
+"""Fig 7: TLB miss penalty, conventional vs SPARTA, 2- vs 8-socket machines.
+
+Pure timeline analysis (Fig 3): the conventional page walk pays a full
+network round trip before the data fetch; SPARTA's walk is one local DRAM
+access because the PTE is co-located in the partition.  Claims (C5)."""
+from __future__ import annotations
+
+from benchmarks.common import Claim, print_csv, save_fig
+from repro.core.sparta import SystemLatencies, conventional_timelines, sparta_timelines
+
+
+def run(quick: bool = False):
+    rows, payload = [], {}
+    reductions = {}
+    for sockets in (2, 8):
+        lat = SystemLatencies(n_sockets=sockets)
+        _, _, _, conv_miss = conventional_timelines(lat)
+        _, _, _, sp_miss = sparta_timelines(lat)
+        norm = sp_miss / conv_miss
+        reductions[sockets] = conv_miss / sp_miss
+        rows.append([f"{sockets}-socket", float(conv_miss), float(sp_miss), float(norm)])
+        payload[f"{sockets}socket"] = {
+            "conventional_cycles": float(conv_miss),
+            "sparta_cycles": float(sp_miss),
+            "normalized": float(norm),
+        }
+
+    c5a = Claim("C5a", "SPARTA miss penalty ~= one local DRAM access (8-socket cycles)",
+                payload["8socket"]["sparta_cycles"],
+                (0.0, SystemLatencies().l_dram + 2 * SystemLatencies().l_tlb + 1), "cy")
+    c5b = Claim("C5b", "bigger machine => bigger reduction (8-socket/2-socket reduction ratio)",
+                reductions[8] / reductions[2], (1.05, 10.0), "x")
+    print_csv("Fig7 miss penalty", ["machine", "conventional_cy", "sparta_cy", "normalized"], rows)
+    print(c5a); print(c5b)
+    payload["claims"] = [c5a.row(), c5b.row()]
+    save_fig("fig7", payload)
+    return [c5a, c5b]

@@ -1,0 +1,66 @@
+"""Fig 9: accelerator-side TLB capacity under SPARTA with physical caches.
+
+SPARTA-8, 16 KB 4-way physical cache per accelerator, accel-side TLB swept
+1..128 entries; the rightmost point is SPARTA with a virtual cache and NO
+accelerator-side translation hardware.  Baseline: conventional translation
+with a 128-entry accel TLB and perfect MMU caches (virtual cache).
+
+Claims (C7): ~8 accel-TLB entries suffice to beat the 128-entry baseline;
+capacity beyond that gives diminishing returns."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Claim, W4, print_csv, save_fig, trace
+from repro.core import cpi
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.tlbsim import SystemSimConfig, simulate_system
+
+ENTRIES = (1, 2, 4, 8, 16, 32, 64, 128)
+P = 8
+MEM_TLB = TLBConfig(entries=128, ways=4)
+CACHE = TLBConfig(entries=256, ways=4)  # 16KB / 64B lines
+
+
+def run(quick: bool = False):
+    n_ops = 8_000 if quick else 25_000
+    lat = SystemLatencies()
+    results, rows = {}, []
+    for w in W4:
+        tr = trace(w, n_ops=n_ops)
+        ipa = tr.instr_per_access
+        # Baseline: conventional, virtual cache + 128-entry accel TLB.
+        ev_base = simulate_system(tr.lines, SystemSimConfig(
+            cache=CACHE, accel_tlb=TLBConfig(entries=128, ways=4),
+            mem_tlb=MEM_TLB, num_partitions=1, accel_probe_on_miss_only=True))
+        base = cpi.evaluate_design("conventional", ev_base, lat, instr_per_access=ipa)
+
+        line = []
+        for e in ENTRIES:
+            ev = simulate_system(tr.lines, SystemSimConfig(
+                cache=CACHE, accel_tlb=TLBConfig(entries=e, ways=min(4, e)),
+                mem_tlb=MEM_TLB, num_partitions=P, accel_probe_on_miss_only=False))
+            sp = cpi.evaluate_design("sparta", ev, lat, instr_per_access=ipa,
+                                     physical_cache=True)
+            line.append(float(sp.speedup_over(base)))
+        # Virtual cache, no accel TLB.
+        ev_v = simulate_system(tr.lines, SystemSimConfig(
+            cache=CACHE, accel_tlb=None, mem_tlb=MEM_TLB, num_partitions=P))
+        sp_v = cpi.evaluate_design("sparta", ev_v, lat, instr_per_access=ipa)
+        line.append(float(sp_v.speedup_over(base)))
+        results[w] = line
+        rows.append([w] + line)
+
+    idx8 = ENTRIES.index(8)
+    wins8 = sum(1 for w in W4 if results[w][idx8] >= 1.0)
+    c7a = Claim("C7a", "SPARTA with 8 accel-TLB entries beats 128-entry baseline (workloads won)",
+                float(wins8), (3, 4), "/4")
+    gains = [results[w][-2] - results[w][idx8] for w in W4]  # 128 vs 8 entries
+    c7b = Claim("C7b", "beyond 8 entries: diminishing returns (mean extra speedup 8->128)",
+                float(np.mean(gains)), (-0.2, 0.25), "x")
+    print_csv("Fig9 speedup vs accel TLB entries",
+              ["workload"] + [str(e) for e in ENTRIES] + ["virt$ no TLB"], rows)
+    print(c7a); print(c7b)
+    save_fig("fig9", {"entries": ENTRIES, "results": results,
+                      "claims": [c7a.row(), c7b.row()]})
+    return [c7a, c7b]

@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks: reference-vs-interpret allclose + XLA-path timing.
+
+On this CPU container the timing column measures the *reference* (XLA) path
+(the Pallas kernels execute via the interpreter, which is not representative
+of TPU performance); the allclose column is the correctness deliverable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_csv, save_fig
+
+
+def _timeit(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention
+    from repro.kernels.flash_attention import flash_attention
+    B, Hq, Hkv, T, D = 2, 8, 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+    ref = flash_attention(q, k, v, kernel_mode="reference")
+    pal = flash_attention(q, k, v, block_q=64, block_k=64, kernel_mode="pallas_interpret")
+    err = float(jnp.abs(ref - pal).max())
+    us = _timeit(lambda a, b, c: flash_attention(a, b, c, kernel_mode="reference"), q, k, v)
+    rows.append(["flash_attention", us, err])
+
+    # paged attention
+    from repro.kernels.paged_attention import paged_attention
+    slots, page, pages = 64, 32, 8
+    q1 = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((slots, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((slots, page, Hkv, D)), jnp.float32)
+    tbl = jnp.asarray(rng.choice(slots, (B, pages), replace=False).astype(np.int32))
+    ctx = jnp.asarray(rng.integers(1, pages * page, B).astype(np.int32))
+    ref = paged_attention(q1, kp, vp, tbl, ctx, kernel_mode="reference")
+    pal = paged_attention(q1, kp, vp, tbl, ctx, kernel_mode="pallas_interpret")
+    err = float(jnp.abs(ref - pal).max())
+    us = _timeit(lambda *a: paged_attention(*a, kernel_mode="reference"), q1, kp, vp, tbl, ctx)
+    rows.append(["paged_attention", us, err])
+
+    # rwkv6 scan
+    from repro.kernels.rwkv6_scan import rwkv6_scan
+    Bh, H, Ts, N = 2, 4, 128, 32
+    r = jnp.asarray(rng.standard_normal((Bh, H, Ts, N)) * 0.5, jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((Bh, H, Ts, N)) * 0.5, jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((Bh, H, Ts, N)) * 0.5, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (Bh, H, Ts, N)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, N)) * 0.5, jnp.float32)
+    oref, sref = rwkv6_scan(r, kk, vv, w, u, kernel_mode="reference")
+    opal, spal = rwkv6_scan(r, kk, vv, w, u, chunk=32, kernel_mode="pallas_interpret")
+    err = float(jnp.abs(oref - opal).max())
+    us = _timeit(lambda *a: rwkv6_scan(*a, kernel_mode="reference")[0], r, kk, vv, w, u)
+    rows.append(["rwkv6_scan", us, err])
+
+    # mamba2 scan
+    from repro.kernels.mamba2_scan import mamba2_scan
+    P, Nst = 32, 16
+    x = jnp.asarray(rng.standard_normal((Bh, H, Ts, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (Bh, H, Ts)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((Bh, Ts, Nst)) * 0.5, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((Bh, Ts, Nst)) * 0.5, jnp.float32)
+    Dp = jnp.asarray(rng.standard_normal((H,)), jnp.float32)
+    yref, _ = mamba2_scan(x, dt, A, Bm, C, Dp, kernel_mode="reference")
+    ypal, _ = mamba2_scan(x, dt, A, Bm, C, Dp, chunk=32, kernel_mode="pallas_interpret")
+    err = float(jnp.abs(yref - ypal).max())
+    us = _timeit(lambda *a: mamba2_scan(*a, kernel_mode="reference")[0], x, dt, A, Bm, C, Dp)
+    rows.append(["mamba2_scan", us, err])
+
+    # tlb_sim
+    from repro.kernels.tlb_sim import tlb_sim
+    s = jnp.asarray(rng.integers(0, 64, 4096), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 50, 4096), jnp.int32)
+    ref = tlb_sim(s, t, 64, 4, kernel_mode="reference")
+    pal = tlb_sim(s, t, 64, 4, block=512, kernel_mode="pallas_interpret")
+    err = float((np.asarray(ref) != np.asarray(pal)).mean())
+    us = _timeit(lambda a, b: tlb_sim(a, b, 64, 4, kernel_mode="reference"), s, t)
+    rows.append(["tlb_sim", us, err])
+
+    print_csv("Kernel benches", ["kernel", "us_per_call(ref/XLA)", "max_err_vs_oracle"], rows)
+    save_fig("kernel_bench", {"rows": rows})
+    for name, _, err in rows:
+        assert err < 5e-4, (name, err)
+    return []

@@ -1,0 +1,333 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all in seconds/step/device:
+
+  compute    = FLOPs_per_device / 197e12        (TPU v5e bf16 peak)
+  memory     = HBM_bytes_per_device / 819e9
+  collective = collective_bytes_per_device / 50e9 (per-link ICI)
+
+Methodology note (documented in EXPERIMENTS.md): XLA's ``cost_analysis()``
+counts while-loop (scan) bodies ONCE, so raw HLO numbers undercount a
+40-layer scanned model by ~40x.  We therefore:
+
+* parse the archived optimized HLO with a **while-aware walker** that
+  multiplies collective bytes by loop trip counts (exact per-device
+  collective traffic, straight from the compiled program);
+* compute FLOPs and HBM bytes from **closed-form analytic models** of each
+  architecture (functions below), cross-checked against the raw
+  cost_analysis numbers (raw ~= analytic/L x small factor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+import pathlib
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import registry
+from repro.configs.base import SHAPES_BY_NAME, ModelConfig, ShapeConfig
+
+CACHE = pathlib.Path(__file__).resolve().parent / "_cache" / "dryrun"
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # B/s / chip
+ICI_BW = 50e9         # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "u4": 1, "s4": 1,
+}
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9_\[\],{}: ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+# ---------------------------------------------------------------------------
+# While-aware HLO collective accounting.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    collectives: List[Tuple[str, int]]          # (kind, bytes)
+    whiles: List[Tuple[str, str]]               # (body, cond)
+    calls: List[str]                            # called computations (x1)
+    max_const: int = 1                          # largest int constant (trip heuristic)
+
+
+def _shape_bytes(text: str) -> int:
+    n_bytes = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_bytes += n * _DTYPE_BYTES[dt]
+    return n_bytes
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("{" in line) and ("->" in line or line.startswith("ENTRY")):
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = Computation(m.group(2), [], [], [])
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if cur is None:
+            continue
+        s = line.strip()
+        mc = _COLL_RE.search(s)
+        if mc and not mc.group(3) == "-done":  # count start (or plain) once
+            kind = mc.group(2)
+            cur.collectives.append((kind, _shape_bytes(s[: mc.end(1)])))
+        mw = re.search(r"while\(", s)
+        if mw:
+            body = re.search(r"body=%?([\w.\-]+)", s)
+            cond = re.search(r"condition=%?([\w.\-]+)", s)
+            if body and cond:
+                cur.whiles.append((body.group(1), cond.group(1)))
+        for mcall in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", s):
+            cur.calls.append(mcall.group(1))
+        for mconst in re.finditer(r"constant\((\d+)\)", s):
+            cur.max_const = max(cur.max_const, int(mconst.group(1)))
+    comps["__entry__"] = comps.get(entry, Computation("none", [], [], []))
+    return comps
+
+
+def trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Scan loops compare the induction var against a constant upper bound;
+    take the cond computation's largest integer constant."""
+    c = comps.get(cond_name)
+    return max(1, c.max_const) if c else 1
+
+
+def loop_scaled_collectives(text: str) -> Tuple[Dict[str, float], List[dict]]:
+    """Per-kind collective bytes with while-loop trip multipliers, plus the
+    top individual contributors (for hillclimb analysis)."""
+    comps = parse_hlo(text)
+    totals: Dict[str, float] = {}
+    contributors: List[dict] = []
+    seen: set = set()
+
+    def walk(name: str, mult: float, depth: int = 0):
+        if depth > 16 or name not in comps:
+            return
+        comp = comps[name]
+        for kind, nbytes in comp.collectives:
+            totals[kind] = totals.get(kind, 0.0) + mult * nbytes
+            contributors.append({"kind": kind, "bytes": nbytes, "mult": mult,
+                                 "total": mult * nbytes, "comp": name})
+        for body, cond in comp.whiles:
+            walk(body, mult * trip_count(comps, cond), depth + 1)
+        for callee in comp.calls:
+            if (name, callee) not in seen:
+                seen.add((name, callee))
+                walk(callee, mult, depth + 1)
+
+    walk(comps["__entry__"].name, 1.0)
+    contributors.sort(key=lambda c: -c["total"])
+    return totals, contributors[:12]
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / bytes models.
+# ---------------------------------------------------------------------------
+
+def _attn_layer_flops_per_tok(cfg: ModelConfig, ctx: float) -> float:
+    proj = 2 * cfg.d_model * (2 * cfg.q_dim + 2 * cfg.kv_dim)
+    attn = 4 * ctx * cfg.head_dim * cfg.num_heads
+    return proj + attn
+
+
+def _ffn_flops_per_tok(cfg: ModelConfig) -> float:
+    mult = 3 if cfg.activation.endswith("_glu") else 2
+    if cfg.moe is not None:
+        return (2 * cfg.d_model * cfg.moe.num_experts
+                + 2 * cfg.d_model * cfg.moe.d_ff_expert * 3 * cfg.moe.top_k)
+    return 2 * cfg.d_model * cfg.d_ff * mult
+
+
+def _mamba_flops_per_tok(cfg: ModelConfig) -> float:
+    from repro.models.mamba2 import dims
+    d_inner, H, Pd, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return (2 * cfg.d_model * (2 * d_inner + 2 * N + H)
+            + 2 * conv_dim * cfg.ssm_conv_width
+            + 6 * N * d_inner
+            + 2 * d_inner * cfg.d_model)
+
+
+def _rwkv_flops_per_tok(cfg: ModelConfig) -> float:
+    D, F, N = cfg.d_model, cfg.d_ff, cfg.ssm_headdim
+    tm = 2 * D * D * 5 + 2 * D * 64 * 2 + 5 * N * D
+    cm = 2 * D * F * 2 + 2 * D * D
+    return tm + cm
+
+
+def forward_flops_per_token(cfg: ModelConfig, ctx: float) -> float:
+    """Per-token forward FLOPs at average attention context ``ctx``."""
+    head = 2 * cfg.d_model * cfg.vocab
+    if cfg.family in ("dense", "moe", "vlm"):
+        return cfg.num_layers * (_attn_layer_flops_per_tok(cfg, ctx) + _ffn_flops_per_tok(cfg)) + head
+    if cfg.family == "ssm":
+        return cfg.num_layers * _rwkv_flops_per_tok(cfg) + head
+    if cfg.family == "hybrid":
+        from repro.models.zamba2 import group_dims
+        G, per = group_dims(cfg)
+        shared = G * (_attn_layer_flops_per_tok(cfg, ctx) + 2 * cfg.d_model * cfg.d_ff * 3)
+        return cfg.num_layers * _mamba_flops_per_tok(cfg) + shared + head
+    if cfg.family == "encdec":
+        # Per decoder token; the encoder is accounted separately by callers.
+        self_a = _attn_layer_flops_per_tok(cfg, ctx)
+        cross = 2 * cfg.d_model * 2 * cfg.q_dim  # q + o proj; scores added by caller
+        return cfg.num_layers * (self_a + cross + _ffn_flops_per_tok(cfg)) + head
+    raise ValueError(cfg.family)
+
+
+def cell_flops(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, float]:
+    """Returns {model (3x fwd, no remat), compiled (4x fwd with remat),
+    fwd} total FLOPs per step (global)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            s_enc = s_dec = S // 2
+            enc_tok = _attn_layer_flops_per_tok(cfg, s_enc) + _ffn_flops_per_tok(cfg)
+            fwd = B * s_enc * cfg.encoder_layers * enc_tok
+            fwd += B * s_dec * forward_flops_per_token(cfg, s_dec / 2)
+            fwd += B * s_dec * cfg.num_layers * 4 * s_enc * cfg.head_dim * cfg.num_heads
+            fwd += B * s_enc * cfg.num_layers * 2 * cfg.d_model * 2 * cfg.kv_dim  # cross KV
+        elif cfg.family == "vlm":
+            fwd = B * S * forward_flops_per_token(cfg, S / 2)
+        else:
+            fwd = B * S * forward_flops_per_token(cfg, S / 2)
+        mult = {"train": (3.0, 4.0), "prefill": (1.0, 1.0)}[shape.kind]
+        return {"fwd": fwd, "model": mult[0] * fwd, "compiled": mult[1] * fwd}
+    # decode: one token per sequence, full context attention reads.
+    if cfg.family == "encdec":
+        f = B * forward_flops_per_token(cfg, S)
+        f += B * cfg.num_layers * 4 * 1500 * cfg.head_dim * cfg.num_heads
+    else:
+        f = B * forward_flops_per_token(cfg, S)
+    return {"fwd": f, "model": f, "compiled": f}
+
+
+def cell_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, chips: int,
+                   param_count: int) -> float:
+    """Per-device HBM bytes per step (analytic model, documented)."""
+    B, S = shape.global_batch, shape.seq_len
+    p_bytes = param_count * 2  # bf16 compute copies
+    if shape.kind == "train":
+        # FSDP: full weights stream through each device 3x (fwd, remat, bwd)
+        # + grads (2B) + fp32 m/v/param opt update sharded 1/chips.
+        w = 3 * p_bytes + 2 * param_count
+        opt = 16 * param_count / chips
+        act = cfg.num_layers * (B * S // max(chips // 16, 1)) * cfg.d_model * 2 * 8 / 16
+        return w + opt + act
+    if shape.kind == "prefill":
+        w = p_bytes
+        act = cfg.num_layers * (B * S / max(chips, 1)) * cfg.d_model * 2 * 8
+        return w + act
+    # decode: TP-sharded weights read once + KV pool sweep.
+    w = p_bytes / 16
+    page = cfg.kv_page_size
+    pages = -(-S // page)
+    if cfg.family == "ssm":
+        from repro.models.rwkv6 import _heads
+        H, N = _heads(cfg)
+        state = cfg.num_layers * B * H * N * N * 4
+        return w + 2 * state / chips
+    n_att_layers = cfg.num_layers if cfg.family != "hybrid" else cfg.num_layers // max(cfg.hybrid_period, 1)
+    pool = n_att_layers * B * pages * page * cfg.kv_dim * 2 * 2
+    return w + pool / chips
+
+
+def load_cells() -> List[dict]:
+    out = []
+    for p in sorted(CACHE.glob("*.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def analyse_cell(rec: dict, *, top_contributors: bool = False) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    cfg = registry.get_config(rec["arch"])
+    shape = SHAPES_BY_NAME[rec["shape"]]
+    chips = rec["chips"]
+    fl = cell_flops(cfg, shape)
+    hlo_gz = CACHE / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.hlo.gz"
+    coll_total = float(sum(rec.get("collective_bytes", {}).values()))
+    contributors = []
+    if hlo_gz.exists():
+        with gzip.open(hlo_gz, "rt") as f:
+            totals, contributors = loop_scaled_collectives(f.read())
+        coll_total = float(sum(totals.values()))
+    hbm = cell_hbm_bytes(cfg, shape, chips, rec.get("param_count", cfg.param_count()))
+
+    t_compute = fl["compiled"] / chips / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": t_compute / bound if bound > 0 else 0.0,
+        "model_flops": fl["model"], "compiled_flops_est": fl["compiled"],
+        "useful_ratio": fl["model"] / fl["compiled"],
+        "hlo_flops_raw_per_dev": rec.get("cost", {}).get("flops", 0.0),
+        "collective_bytes_per_dev": coll_total,
+        "hbm_bytes_per_dev": hbm,
+    }
+    if top_contributors:
+        out["top_collectives"] = contributors
+    return out
+
+
+def table(mesh: str = "16x16") -> List[dict]:
+    rows = []
+    for rec in load_cells():
+        if rec.get("mesh") != mesh:
+            continue
+        r = analyse_cell(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--cell", default=None, help="arch:shape for detailed contributors")
+    args = ap.parse_args()
+    if args.cell:
+        arch, shape = args.cell.split(":")
+        rec = json.loads((CACHE / f"{arch}__{shape}__{args.mesh}.json").read_text())
+        r = analyse_cell(rec, top_contributors=True)
+        print(json.dumps(r, indent=1, default=float))
+        return
+    rows = table(args.mesh)
+    hdr = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s", "dominant", "roofline_fraction"]
+    print(",".join(hdr))
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        print(",".join(str(round(r[k], 6)) if isinstance(r[k], float) else str(r[k]) for k in hdr))
+
+
+if __name__ == "__main__":
+    main()

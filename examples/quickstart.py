@@ -1,0 +1,35 @@
+"""Quickstart: the paper's result in three steps on one CPU.
+
+1. Generate an index-traversal trace (paper Table 2 workload).
+2. Compare conventional vs SPARTA memory-side TLBs (Fig 4).
+3. Run the Fig 10 CPI model: end-to-end speedup + overhead reduction.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import cpi, tlbsim, traces
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.tlbsim import SystemSimConfig, simulate_system
+
+GIB = 1 << 30
+
+print("=== SPARTA quickstart ===")
+tr = traces.generate("bst_internal", n_ops=20_000, footprint_bytes=128 * GIB)
+print(f"workload=bst_internal accesses={tr.num_accesses:,} footprint=128GiB")
+
+for P in (1, 4, 32, 128):
+    miss = tlbsim.miss_ratio(tr.vpns(12), 128, num_partitions=P)
+    label = "conventional" if P == 1 else f"SPARTA-{P}  "
+    print(f"  {label} 128-entry TLB{'s' if P > 1 else ' '}: miss ratio {miss:.3f}")
+
+lat = SystemLatencies(n_sockets=8)
+base_ev = simulate_system(tr.lines, SystemSimConfig(
+    accel_tlb=TLBConfig(entries=128, ways=4), num_partitions=1))
+sp_ev = simulate_system(tr.lines, SystemSimConfig(num_partitions=32))
+base = cpi.evaluate_design("conventional", base_ev, lat, instr_per_access=tr.instr_per_access)
+sp = cpi.evaluate_design("sparta", sp_ev, lat, instr_per_access=tr.instr_per_access)
+ideal = cpi.evaluate_design("ideal", sp_ev, lat, instr_per_access=tr.instr_per_access)
+print(f"\nspeedup over conventional: SPARTA-32 {sp.speedup_over(base):.2f}x "
+      f"(ideal {ideal.speedup_over(base):.2f}x)")
+print(f"translation overhead: {base.access.translation_overhead:.0f} -> "
+      f"{sp.access.translation_overhead:.1f} cycles/access "
+      f"({base.access.translation_overhead / sp.access.translation_overhead:.1f}x reduction)")

@@ -1,0 +1,50 @@
+"""End-to-end serving driver: SPARTA-paged KV cache with batched requests.
+
+Continuous batching, demand page allocation, prefix sharing (fork) with
+copy-on-write — the paper's VM machinery running an LM server.
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.serve.engine import SpartaEngine
+
+base = registry.get_smoke("stablelm-12b").__dict__.copy()
+base.update(dtype="float32", kv_page_size=8, num_layers=4, d_model=128,
+            num_heads=8, num_kv_heads=4, head_dim=16, d_ff=256)
+cfg = ModelConfig(**base)
+params = tfm.init(jax.random.PRNGKey(0), cfg)
+print(f"model: {sum(x.size for x in jax.tree.leaves(params)):,} params; "
+      f"page={cfg.kv_page_size} tokens")
+
+eng = SpartaEngine(cfg, params, num_partitions=4, slots_per_partition=64, max_batch=4)
+rng = np.random.default_rng(0)
+rids = [eng.submit(list(rng.integers(0, cfg.vocab, rng.integers(4, 12))),
+                   max_new_tokens=12) for _ in range(8)]
+t0 = time.time()
+steps = 0
+while eng.step() or eng.waiting:
+    steps += 1
+dt = time.time() - t0
+done = len(eng.finished)
+toks = sum(len(r.generated) for r in eng.finished.values())
+print(f"served {done} requests / {toks} tokens in {steps} engine steps ({dt:.1f}s)")
+print("free pages per partition:", [eng.kv.num_free(p) for p in range(4)])
+
+# Prefix sharing: branch the first finished request 3 ways (zero-copy fork,
+# CoW only on the shared tail page).
+free_before = sum(eng.kv.num_free(p) for p in range(4))
+branches = [eng.fork_request(rids[0], max_new_tokens=6) for _ in range(3)]
+print(f"forked 3 branches: pages allocated by fork = "
+      f"{free_before - sum(eng.kv.num_free(p) for p in range(4))} (expect 0)")
+eng.run_to_completion()
+for b in branches:
+    print(f"  branch {b}: +{len(eng.finished[b].generated)} tokens")
+eng.kv.check_invariants()
+print("invariants OK")

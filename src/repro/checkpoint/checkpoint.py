@@ -1,0 +1,173 @@
+"""Atomic, shardable, reshardable checkpoints (no orbax on box).
+
+Layout::
+
+    <root>/step_000123.tmp-<nonce>/   (written)
+        manifest.json                 {leaf path -> file, shape, dtype}
+        <leaf>.npy ...
+    <root>/step_000123/               (atomic rename = commit)
+
+Guarantees:
+* **Atomicity** — readers only ever see fully-written checkpoints (rename is
+  the commit point; interrupted writes leave only ``.tmp-*`` junk that is
+  swept on the next save).
+* **Keep-k** — old steps pruned after a successful commit.
+* **Elastic restore** — ``restore_resharded`` materialises the tree on ANY
+  mesh with fresh PartitionSpecs, so a job can restart on a different device
+  count (node failures) without conversion tools.
+* **Async** — ``AsyncCheckpointer`` moves serialisation off the step loop.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import queue
+import re
+import shutil
+import threading
+import uuid
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    def fill(path, leaf):
+        key = _SEP.join(
+            str(k.key) if hasattr(k, "key") else str(k.idx) for k in path
+        )
+        arr = flat[key]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = arr.astype(leaf.dtype)
+        return arr
+
+    return jax.tree_util.tree_map_with_path(fill, template)
+
+
+def step_dir(root, step: int) -> pathlib.Path:
+    return pathlib.Path(root) / f"step_{step:08d}"
+
+
+def latest_step(root) -> Optional[int]:
+    root = pathlib.Path(root)
+    if not root.exists():
+        return None
+    steps = [
+        int(m.group(1))
+        for p in root.iterdir()
+        if (m := re.fullmatch(r"step_(\d+)", p.name))
+    ]
+    return max(steps) if steps else None
+
+
+def save(root, step: int, tree, *, keep: int = 3) -> pathlib.Path:
+    """Write checkpoint atomically; prune to the newest ``keep`` steps."""
+    root = pathlib.Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    # Sweep stale partial writes from crashed runs.
+    for junk in root.glob("*.tmp-*"):
+        shutil.rmtree(junk, ignore_errors=True)
+
+    final = step_dir(root, step)
+    tmp = root / f"{final.name}.tmp-{uuid.uuid4().hex[:8]}"
+    tmp.mkdir()
+    manifest = {}
+    for key, leaf in _flatten(tree).items():
+        arr = np.asarray(leaf)
+        fname = f"{abs(hash(key)) & 0xFFFFFFFF:08x}_{len(manifest)}.npy"
+        np.save(tmp / fname, arr)
+        manifest[key] = {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    (tmp / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)  # commit
+
+    steps = sorted(
+        int(re.fullmatch(r"step_(\d+)", p.name).group(1))
+        for p in root.iterdir()
+        if re.fullmatch(r"step_(\d+)", p.name)
+    )
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(step_dir(root, s), ignore_errors=True)
+    return final
+
+
+def restore(root, step: Optional[int] = None, template: Any = None):
+    """Load a checkpoint as numpy arrays (or into ``template``'s structure)."""
+    root = pathlib.Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = step_dir(root, step)
+    manifest = json.loads((d / "manifest.json").read_text())["leaves"]
+    flat = {k: np.load(d / meta["file"]) for k, meta in manifest.items()}
+    if template is None:
+        return flat, step
+    return _unflatten_into(template, flat), step
+
+
+def restore_resharded(root, template, mesh, specs, step: Optional[int] = None):
+    """Elastic restore: place every leaf on ``mesh`` with ``specs`` —
+    the mesh may differ arbitrarily from the one that saved."""
+    from jax.sharding import NamedSharding
+
+    tree, step = restore(root, step, template)
+    def put(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, specs), step
+
+
+class AsyncCheckpointer:
+    """Background-thread writer: ``submit`` returns immediately; ``wait``
+    joins outstanding writes (call before exit / preemption)."""
+
+    def __init__(self, root, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                save(self.root, step, tree, keep=self.keep)
+            except BaseException as e:  # surfaced on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, step: int, tree):
+        # Pull to host first so the device buffers can be donated/reused.
+        host_tree = jax.tree.map(np.asarray, tree)
+        self._q.put((step, host_tree))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join()

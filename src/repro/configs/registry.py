@@ -1,0 +1,165 @@
+"""Architecture registry + per-(arch, shape) input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every input of
+the lowered step function (no device allocation — the dry-run pattern):
+
+* train/prefill shapes -> inputs of ``train_step`` / ``prefill_step``;
+* decode/long_decode  -> inputs of ``serve_step``: one new token per
+  sequence plus the SPARTA-paged KV pools.
+
+KV pool layout (global view): ``[L, B, P, pages_local, page, Hkv, hd]`` —
+``P`` is the number of SPARTA partitions (the mesh ``model`` axis, or
+data x model for the single-sequence long-context shape), ``pages_local`` the
+per-partition page region of one sequence.  Block tables are
+``[B, P, pages_local]`` int32 *local* slot ids (the co-located per-partition
+page tables).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeConfig, cell_applicable,
+)
+
+ARCH_IDS: Tuple[str, ...] = (
+    "stablelm-12b",
+    "qwen3-14b",
+    "starcoder2-7b",
+    "gemma-7b",
+    "rwkv6-1.6b",
+    "internvl2-2b",
+    "qwen3-moe-30b-a3b",
+    "dbrx-132b",
+    "zamba2-7b",
+    "whisper-medium",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; options: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    return _module(arch_id).smoke()
+
+
+def all_cells():
+    """Yield every applicable (arch_id, ShapeConfig) cell (40 total minus
+    documented long_500k skips)."""
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, _ = cell_applicable(cfg, s)
+            if ok:
+                yield a, s
+
+
+# ---------------------------------------------------------------------------
+# Input specs.
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def pool_geometry(cfg: ModelConfig, shape: ShapeConfig, num_partitions: int):
+    page = cfg.kv_page_size
+    pages_per_seq = -(-shape.seq_len // page)
+    pages_local = -(-pages_per_seq // num_partitions)
+    return page, pages_per_seq, pages_local
+
+
+def input_specs(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    *,
+    num_partitions: int = 16,
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the step function of this (arch, shape) cell."""
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name}: {why}")
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if not shape.lowers_serve_step:
+        if cfg.family == "vlm":
+            i = cfg.num_image_tokens
+            return {
+                "patch_embeds": _sds((B, i, cfg.d_model), dt),
+                "tokens": _sds((B, S - i), jnp.int32),
+            }
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((B, S // 2, cfg.d_model), dt),
+                "tokens": _sds((B, S // 2), jnp.int32),
+            }
+        return {"tokens": _sds((B, S), jnp.int32)}
+
+    # ---- serve_step inputs -------------------------------------------------
+    P = num_partitions
+    page, pages_per_seq, pages_local = pool_geometry(cfg, shape, P)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": _sds((B,), jnp.int32),
+        "ctx_len": _sds((B,), jnp.int32),
+    }
+    if cfg.family == "ssm":  # rwkv6: O(1) recurrent state, no paged KV
+        H = cfg.d_model // cfg.ssm_headdim
+        N = cfg.ssm_headdim
+        L, D = cfg.num_layers, cfg.d_model
+        specs.update({
+            "tm_shift": _sds((L, B, D), jnp.float32),
+            "cm_shift": _sds((L, B, D), jnp.float32),
+            "wkv": _sds((L, B, H, N, N), jnp.float32),
+        })
+        return specs
+
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.family == "hybrid":
+        from repro.models.zamba2 import group_dims
+        from repro.models.mamba2 import dims as m2dims
+        G, per = group_dims(cfg)
+        d_inner, H, Pdim, N = m2dims(cfg)
+        pools = (G, B, P, pages_local, page, Hkv, hd)
+        specs.update({
+            "k_pools": _sds(pools, dt),
+            "v_pools": _sds(pools, dt),
+            "tables": _sds((B, P, pages_local), jnp.int32),
+            "conv_state": _sds((G, per, B, cfg.ssm_conv_width - 1, d_inner + 2 * N), jnp.float32),
+            "ssm_state": _sds((G, per, B, H, N, Pdim), jnp.float32),
+        })
+        return specs
+
+    L = cfg.num_layers
+    pools = (L, B, P, pages_local, page, Hkv, hd)
+    specs.update({
+        "k_pools": _sds(pools, dt),
+        "v_pools": _sds(pools, dt),
+        "tables": _sds((B, P, pages_local), jnp.int32),
+    })
+    if cfg.family == "encdec":
+        s_enc = 1500  # whisper's fixed 30 s encoder grid
+        specs["cross_k"] = _sds((L, B, s_enc, Hkv, hd), dt)
+        specs["cross_v"] = _sds((L, B, s_enc, Hkv, hd), dt)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape — no allocation."""
+    from repro import models
+    return jax.eval_shape(lambda k: models.init(k, cfg), jax.random.PRNGKey(0))

@@ -1,0 +1,85 @@
+"""Gradient compression for cross-pod (DCN) reduction.
+
+Intra-pod gradients reduce over ICI at full precision; the pod axis crosses
+DCN where bandwidth is ~10x scarcer.  Two compressors:
+
+* **top-k + error feedback** — keep the k largest-|g| entries per tensor,
+  accumulate the residual locally (Stich et al.); unbiased over time.
+* **int8 row-scaled quantisation** — 4x cheaper transport, cheap to fuse.
+
+Both are pure pytree transforms usable as ``compress_grads`` in
+``make_train_step`` (applied before the optimizer; the all-reduce that GSPMD
+inserts then moves the compressed representation's worth of bytes — for the
+dry-run roofline we model DCN bytes as raw_bytes * ratio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "topk"        # topk | int8 | none
+    topk_ratio: float = 0.05  # fraction of entries kept
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def topk_compress_leaf(g: jnp.ndarray, err: jnp.ndarray, ratio: float):
+    """Returns (compressed-dense g', new error).  g' keeps the top-k entries
+    of (g + err); the remainder accumulates into the error state."""
+    gf = g.astype(jnp.float32) + err
+    flat = gf.reshape(-1)
+    k = max(1, int(flat.size * ratio))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(gf) >= thresh
+    kept = jnp.where(mask, gf, 0.0)
+    return kept.astype(g.dtype), gf - kept
+
+
+def topk_compress(grads, err_state, ratio: float):
+    out = jax.tree.map(
+        lambda g, e: topk_compress_leaf(g, e, ratio), grads, err_state
+    )
+    kept = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return kept, new_err
+
+
+def int8_quantize(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (last-dim) absmax int8 quantisation."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def int8_roundtrip(grads):
+    """Quantise + dequantise every leaf (what crosses DCN is the int8)."""
+    def one(g):
+        q, s = int8_quantize(g)
+        return int8_dequantize(q, s, g.dtype)
+    return jax.tree.map(one, grads)
+
+
+def compressed_bytes(grads, cfg: CompressionConfig) -> int:
+    """Bytes that would cross DCN per step under this compressor."""
+    raw = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    if cfg.kind == "topk":
+        # value (4B) + index (4B) per kept entry
+        n = sum(g.size for g in jax.tree.leaves(grads))
+        return int(n * cfg.topk_ratio * 8)
+    if cfg.kind == "int8":
+        return int(raw // 4 if raw else 0)
+    return int(raw)

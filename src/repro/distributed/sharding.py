@@ -1,0 +1,197 @@
+"""PartitionSpec rules: parameters, optimizer state, inputs, outputs.
+
+Train: TP over ``model`` on heads / FFN-hidden / vocab / experts, FSDP
+(ZeRO-3-style) over ``data`` (and ``pod``) on the complementary dim of every
+large matrix; optimizer state inherits the parameter specs.
+
+Serve: TP over ``model`` only (weights must be gatherable per token without
+FSDP all-gathers on the critical path); SPARTA KV pools shard their explicit
+partition axis over ``model`` — or over (data, model) jointly for the
+single-sequence long-context shape.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def data_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+# (regex on path suffix, trailing-dim axes) — earlier rules win.
+# `F` = fsdp axis placeholder, `T` = tensor axis, None = replicated dim.
+_TRAIN_RULES: Tuple[Tuple[str, Tuple[Any, ...]], ...] = (
+    (r"moe/(w_gate|w_up)$",   ("T", "F", None)),      # [E, D, F]
+    (r"moe/w_down$",          ("T", None, "F")),      # [E, F, D]
+    (r"moe/router$",          ("F", None)),           # [D, E]
+    (r"embed$",               ("T", "F")),            # [V, D]
+    (r"lm_head$",             ("F", "T")),            # [D, V]
+    (r"dec_pos$",             ("F", None)),           # [maxpos, D]
+    (r"(attn|cm)/(wq|wk|wv)$", ("F", "T")),
+    (r"attn/wo$",             ("T", "F")),
+    (r"tm/(wr|wk|wv|wg)$",    ("F", "T")),
+    (r"tm/wo$",               ("T", "F")),
+    (r"tm/w_lora_a$",         ("F", None)),
+    (r"tm/w_lora_b$",         (None, "F")),
+    (r"cm/wr$",               ("F", "T")),
+    (r"(mlp/)?(w_gate|w_up)$", ("F", "T")),           # [D, F]
+    (r"(mlp/)?w_down$",       ("T", "F")),            # [F, D]
+    (r"in_proj$",             ("F", "T")),
+    (r"out_proj$",            ("T", "F")),
+    (r"conv_w$",              (None, "T")),
+    (r"(conv_b|gate_norm)$",  ("T",)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def spec_for_param(path_str: str, ndim: int, fsdp, tp, *, serve: bool = False):
+    for pat, dims in _TRAIN_RULES:
+        if re.search(pat, path_str):
+            axes = []
+            for d in dims:
+                if d == "F":
+                    axes.append(None if serve else fsdp)
+                elif d == "T":
+                    axes.append(tp)
+                else:
+                    axes.append(None)
+            pad = ndim - len(axes)
+            if pad < 0:  # scalar-ish param matched a matrix rule; replicate
+                return P()
+            return P(*([None] * pad + axes))
+    return P()  # norms, biases, small vectors: replicated
+
+
+def param_specs(abstract_params, cfg: ModelConfig, *, mode: str = "train",
+                multi_pod: bool = False):
+    """PartitionSpec pytree matching the parameter pytree."""
+    fsdp = data_axes(multi_pod)
+    serve = mode == "serve"
+
+    def one(path, leaf):
+        return spec_for_param(_path_str(path), leaf.ndim, fsdp, "model", serve=serve)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_state_specs(abstract_params, cfg: ModelConfig, *, multi_pod: bool = False):
+    ps = param_specs(abstract_params, cfg, mode="train", multi_pod=multi_pod)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool = False) -> Dict[str, P]:
+    """Input shardings for train/prefill batches."""
+    dp = data_axes(multi_pod)
+    if cfg.family == "vlm":
+        return {"patch_embeds": P(dp, None, None), "tokens": P(dp, None)}
+    if cfg.family == "encdec":
+        return {"frames": P(dp, None, None), "tokens": P(dp, None)}
+    return {"tokens": P(dp, None)}
+
+
+def serve_partition_axes(shape: ShapeConfig, *, multi_pod: bool = False):
+    """Mesh axes acting as SPARTA partitions for this decode shape.
+
+    Normal decode: the ``model`` axis (batch shards over data).  The
+    single-sequence long-context shape spreads pages over EVERY axis."""
+    if shape.kind == "long_decode":
+        return (("pod", "data", "model") if multi_pod else ("data", "model"))
+    return "model"
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool = False) -> Dict[str, P]:
+    dp = data_axes(multi_pod)
+    part = serve_partition_axes(shape, multi_pod=multi_pod)
+    long = shape.kind == "long_decode"
+    bdp = None if long else dp  # batch=1 cannot shard
+    specs: Dict[str, P] = {"tokens": P(bdp), "ctx_len": P(bdp)}
+    if cfg.family == "ssm":
+        tp = "model"
+        specs.update({
+            "tm_shift": P(None, bdp, tp),
+            "cm_shift": P(None, bdp, tp),
+            "wkv": P(None, bdp, tp, None, None),
+        })
+        return specs
+    pool = P(None, bdp, part, None, None, None, None)
+    specs.update({
+        "k_pools": pool,
+        "v_pools": pool,
+        "tables": P(bdp, part, None),
+    })
+    if cfg.family == "hybrid":
+        specs["conv_state"] = P(None, None, bdp, None, "model" if not long else None)
+        specs["ssm_state"] = P(None, None, bdp, "model" if not long else None, None, None)
+    if cfg.family == "encdec":
+        specs["cross_k"] = P(None, bdp, None, "model", None)
+        specs["cross_v"] = P(None, bdp, None, "model", None)
+    return specs
+
+
+def serve_output_specs(cfg: ModelConfig, shape: ShapeConfig, *, multi_pod: bool = False):
+    """(logits spec, new-state specs dict)."""
+    dp = data_axes(multi_pod)
+    long = shape.kind == "long_decode"
+    bdp = None if long else dp
+    inp = serve_input_specs(cfg, shape, multi_pod=multi_pod)
+    state_keys = {
+        "ssm": ("tm_shift", "cm_shift", "wkv"),
+        "hybrid": ("conv_state", "ssm_state", "k_pools", "v_pools"),
+    }.get(cfg.family, ("k_pools", "v_pools"))  # cross KV is input-only
+    return P(bdp, "model"), {k: inp[k] for k in state_keys}
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding policy (perf iteration 1, EXPERIMENTS.md §Perf).
+#
+# With small-KV-head GQA archs (starcoder2 kv=4 vs model=16) GSPMD loses the
+# batch sharding inside the attention layer and falls back to all-reducing
+# full [B, T, D] f32 activations INSIDE the layer x KV-block loops (observed:
+# 3 x 19.3 GB x 256 trips on starcoder2 train_4k).  Explicit constraints at
+# block boundaries pin activations to (batch->data, heads->model-if-divisible)
+# and cut per-device collective traffic by ~100x.
+# ---------------------------------------------------------------------------
+
+_ACT_POLICY: dict = {}
+
+
+def set_activation_policy(*, dp, tp: str = "model", tp_size: int = 0):
+    """Enable activation constraints (requires an ambient mesh via
+    ``jax.sharding.use_mesh`` at trace time)."""
+    _ACT_POLICY.update(dp=dp, tp=tp, tp_size=tp_size)
+
+
+def clear_activation_policy():
+    _ACT_POLICY.clear()
+
+
+def constrain_btd(x):
+    """[B, T, D] residual-stream activations: batch over data."""
+    if not _ACT_POLICY:
+        return x
+    import jax
+    return jax.lax.with_sharding_constraint(x, P(_ACT_POLICY["dp"], None, None))
+
+
+def constrain_bthd(x, n_heads: int):
+    """[B, T, H, hd] head-major activations: heads over model if divisible."""
+    if not _ACT_POLICY:
+        return x
+    import jax
+    tp = _ACT_POLICY["tp"] if _ACT_POLICY["tp_size"] and n_heads % _ACT_POLICY["tp_size"] == 0 else None
+    return jax.lax.with_sharding_constraint(x, P(_ACT_POLICY["dp"], None, tp, None))

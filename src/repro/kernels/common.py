@@ -1,0 +1,31 @@
+"""Shared kernel-dispatch helpers.
+
+Every kernel package exposes ``ops.py`` with a public op that takes
+``kernel_mode``:
+
+* ``"reference"``        — pure-jnp oracle (``ref.py``).  Default on CPU and
+                           inside dry-run graphs (the CPU backend cannot
+                           compile Mosaic/TPU kernels).
+* ``"pallas"``           — the TPU kernel (``kernel.py``), compiled by Mosaic.
+* ``"pallas_interpret"`` — the same kernel body executed by the Pallas
+                           interpreter on CPU; used by the test suite to
+                           validate kernels against the oracle.
+* ``"auto"``             — ``pallas`` on TPU backends, else ``reference``.
+"""
+from __future__ import annotations
+
+import jax
+
+VALID_MODES = ("auto", "reference", "pallas", "pallas_interpret")
+
+
+def resolve_mode(kernel_mode: str) -> str:
+    if kernel_mode not in VALID_MODES:
+        raise ValueError(f"kernel_mode={kernel_mode!r}; expected one of {VALID_MODES}")
+    if kernel_mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return kernel_mode
+
+
+def next_multiple(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,149 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Tiling: grid = (B, Hq, Tq/Bq, Tk/Bk) — the KV-block dimension is innermost,
+so on TPU the grid walks KV blocks sequentially while the f32 running
+(m, l, acc) state lives in VMEM scratch that persists across grid steps.
+Block shapes keep the MXU busy: Bq x D and Bk x D tiles with D = head_dim
+(>= 128-aligned for the MXU; smaller head dims still validate via the
+interpreter and pad on real hardware).
+
+GQA is handled in the BlockSpec index maps: the KV specs map query head
+``h`` to KV head ``h // group`` — no KV replication in HBM.
+
+Causal masking uses the decode-style alignment (query i sees keys
+<= i + Tk - Tq) and fully-masked KV blocks are skipped with ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,            # VMEM blocks
+    o_ref,                          # output block
+    m_scr, l_scr, acc_scr,          # f32 scratch, persists across kv steps
+    *,
+    sm_scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    kv_blocks: int,
+    tq: int,
+    tk: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + (tk - tq)  # decode-style causal alignment
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # [Bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)          # [Bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)          # [Bk, D]
+        # Zero the Tk padding of V: the masked probabilities are 0 but the
+        # padded V rows may be NaN (interpret mode) — 0 * NaN = NaN.
+        k_valid = (k_start + jax.lax.broadcasted_iota(jnp.int32, (block_k, 1), 0)) < tk
+        v = jnp.where(k_valid, v, 0.0)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale                                  # [Bq, Bk]
+
+        q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_ids < tk  # guard Tk padding
+        if causal:
+            mask = mask & (k_ids <= q_ids)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # [Bq]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        # Skip KV blocks strictly above the diagonal of this Q block.
+        pl.when(k_start <= q_start + block_q - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, Hq, Tq, D]
+    k: jnp.ndarray,  # [B, Hkv, Tk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    q_blocks = pl.cdiv(Tq, block_q)
+    kv_blocks = pl.cdiv(Tk, block_k)
+
+    grid = (B, Hq, q_blocks, kv_blocks)
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        kv_blocks=kv_blocks,
+        tq=Tq,
+        tk=Tk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

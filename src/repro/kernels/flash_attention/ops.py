@@ -1,0 +1,33 @@
+"""Public flash-attention op with kernel-mode dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_mode
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    kernel_mode: str = "auto",
+) -> jnp.ndarray:
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        # Memory-efficient XLA path (scan over KV blocks) — semantically
+        # identical to attention_ref, which remains the naive test oracle.
+        from repro.models.flash_ref import flash_attention_jnp
+        return flash_attention_jnp(q, k, v, causal=causal, sm_scale=sm_scale)
+    return flash_attention_pallas(
+        q, k, v,
+        causal=causal, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k,
+        interpret=(mode == "pallas_interpret"),
+    )

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (GQA-aware, causal optional)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Tq, D]
+    k: jnp.ndarray,  # [B, Hkv, Tk, D]
+    v: jnp.ndarray,  # [B, Hkv, Tk, D]
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Naive full-materialisation attention in f32; GQA via head grouping."""
+    B, Hq, Tq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Tq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if causal:
+        Tk = k.shape[2]
+        # Decode-style alignment: query i attends to keys <= i + (Tk - Tq).
+        qi = jnp.arange(Tq)[:, None] + (Tk - Tq)
+        ki = jnp.arange(Tk)[None, :]
+        s = jnp.where(ki <= qi, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, Hq, Tq, D).astype(q.dtype)

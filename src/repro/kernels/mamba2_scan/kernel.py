@@ -1,0 +1,121 @@
+"""Mamba2 SSD as a chunked Pallas TPU kernel.
+
+Same chunked-matmul structure as the RWKV6 kernel, but the decay is a
+per-head *scalar* per step, which makes the rescaling exactly the SSD
+"1-semiseparable" decomposition (Dao & Gu, 2024) — three MXU matmuls per
+chunk plus a rank-1 state update:
+
+    c_t = prod_{s<=t} a_s                 (inclusive cumulative decay)
+    y_t = (c_t C_t) @ S0                  [C,N] @ [N,P]
+        + sum_{s<=t} (c_t/c_s)(C_t . B_s) dt_s x_s    (causal-inclusive A@X)
+        + D x_t
+    S_C = c_C S0 + (B . dt . c_C/c_s)^T X             [N,C] @ [C,P]
+
+Grid: (B, H, T/C), chunks sequential, S in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba2_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+    y_ref, s_out_ref,
+    s_scr,
+    *,
+    chunk: int,
+    t_blocks: int,
+):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)     # [C, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)   # [C]
+    A = a_ref[0]                             # scalar (per head)
+    Bm = b_ref[0].astype(jnp.float32)       # [C, N]
+    Cm = c_ref[0].astype(jnp.float32)       # [C, N]
+    D = d_ref[0]
+    S0 = s_scr[...]                          # [N, P]
+
+    logc = jnp.cumsum(A * dt)                # [C] inclusive log-decay
+    c_incl = jnp.exp(logc)
+    c_last = c_incl[-1]
+
+    q_eff = Cm * c_incl[:, None]             # (c_t C_t)
+    k_eff = Bm * (dt * jnp.exp(-logc))[:, None]  # B_s dt_s / c_s
+
+    y_inter = jax.lax.dot_general(
+        q_eff, S0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # [C, P]
+    att = jax.lax.dot_general(
+        q_eff, k_eff, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                        # [C, C]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(si <= ti, att, 0.0)      # INCLUSIVE: y_t sees its own token
+    y_intra = jax.lax.dot_general(
+        att, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y_ref[0, 0] = (y_inter + y_intra + D * x).astype(y_ref.dtype)
+
+    k_dec = k_eff * c_last                    # B_s dt_s c_C / c_s
+    S_new = c_last * S0 + jax.lax.dot_general(
+        k_dec, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    s_scr[...] = S_new
+
+    @pl.when(tb == t_blocks - 1)
+    def _finish():
+        s_out_ref[0, 0] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_scan_pallas(
+    x: jnp.ndarray,    # [B, H, T, P]
+    dt: jnp.ndarray,   # [B, H, T]
+    A: jnp.ndarray,    # [H]
+    Bm: jnp.ndarray,   # [B, T, N]
+    C: jnp.ndarray,    # [B, T, N]
+    D: jnp.ndarray,    # [H]
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+):
+    B_, H, T, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    assert T % chunk == 0, f"T={T} vs chunk={chunk}"
+    t_blocks = T // chunk
+
+    kernel = functools.partial(_mamba2_kernel, chunk=chunk, t_blocks=t_blocks)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=(B_, H, t_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, t: (b, h, t)),
+            pl.BlockSpec((1,), lambda b, h, t: (h,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, N), lambda b, h, t: (b, t, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, t: (b, t, 0)),
+            pl.BlockSpec((1,), lambda b, h, t: (h,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((B_, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bm, C, D.astype(jnp.float32))
+    return y, s

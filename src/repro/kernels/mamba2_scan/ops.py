@@ -1,0 +1,31 @@
+"""Public Mamba2 SSD scan op with kernel-mode dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_mode
+from repro.kernels.mamba2_scan.kernel import mamba2_scan_pallas
+from repro.kernels.mamba2_scan.ref import mamba2_decode_step, mamba2_scan_ref
+
+__all__ = ["mamba2_scan", "mamba2_decode_step"]
+
+
+def mamba2_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    C: jnp.ndarray,
+    D: jnp.ndarray,
+    *,
+    chunk: int = 64,
+    kernel_mode: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        return mamba2_scan_ref(x, dt, A, Bm, C, D)
+    return mamba2_scan_pallas(
+        x, dt, A, Bm, C, D, chunk=chunk, interpret=(mode == "pallas_interpret")
+    )

@@ -1,0 +1,70 @@
+"""Exact sequential oracle for the Mamba2 (SSD) recurrence.
+
+Per head h (state size N, head dim P), with scalar decay a_t = exp(A_h dt_t):
+
+    S_t = a_t S_{t-1} + dt_t B_t (x) x_t        (S in R^{N x P})
+    y_t = C_t^T S_t + D_h x_t
+
+B_t, C_t are shared across heads (n_groups = 1, the Mamba2 default).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba2_scan_ref(
+    x: jnp.ndarray,    # [B, H, T, P]
+    dt: jnp.ndarray,   # [B, H, T]  (post-softplus, > 0)
+    A: jnp.ndarray,    # [H]        (negative)
+    Bm: jnp.ndarray,   # [B, T, N]
+    C: jnp.ndarray,    # [B, T, N]
+    D: jnp.ndarray,    # [H]
+    state: jnp.ndarray | None = None,  # [B, H, N, P]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B_, H, T, P = x.shape
+    N = Bm.shape[-1]
+    if state is None:
+        state = jnp.zeros((B_, H, N, P), jnp.float32)
+
+    def head_scan(xh, dth, Ah, Bh, Ch, Dh, s0):
+        def step(S, inp):
+            xt, dtt, bt, ct = inp
+            a = jnp.exp(Ah * dtt)
+            S = a * S + dtt * bt[:, None] * xt[None, :]
+            y = (ct[:, None] * S).sum(axis=0) + Dh * xt
+            return S, y
+
+        S, y = jax.lax.scan(step, s0, (xh, dth, Bh, Ch))
+        return y, S
+
+    f = jax.vmap(  # over B
+        jax.vmap(head_scan, in_axes=(0, 0, 0, None, None, 0, 0)),  # over H
+        in_axes=(0, 0, None, 0, 0, None, 0),
+    )
+    y, S = f(
+        x.astype(jnp.float32), dt.astype(jnp.float32), A.astype(jnp.float32),
+        Bm.astype(jnp.float32), C.astype(jnp.float32), D.astype(jnp.float32),
+        state.astype(jnp.float32),
+    )
+    return y.astype(x.dtype), S
+
+
+def mamba2_decode_step(
+    x: jnp.ndarray,    # [B, H, P]
+    dt: jnp.ndarray,   # [B, H]
+    A: jnp.ndarray,    # [H]
+    Bm: jnp.ndarray,   # [B, N]
+    C: jnp.ndarray,    # [B, N]
+    D: jnp.ndarray,    # [H]
+    state: jnp.ndarray,  # [B, H, N, P]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) single-token step for decode (long_500k runs on this path)."""
+    a = jnp.exp(A[None, :] * dt)                       # [B, H]
+    S = a[..., None, None] * state + (
+        dt[..., None, None] * Bm[:, None, :, None] * x[:, :, None, :]
+    )
+    y = (C[:, None, :, None] * S).sum(axis=2) + D[None, :, None] * x
+    return y.astype(x.dtype), S

@@ -1,0 +1,62 @@
+"""Public paged-attention op with kernel-mode dispatch.
+
+``paged_attention``       — full decode attention over a paged KV pool.
+``paged_attention_partial`` — per-partition residuals for the SPARTA
+                              sequence-sharded serve path (merged with
+                              :func:`merge_partials`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_mode
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+from repro.kernels.paged_attention.ref import merge_partials, paged_attention_ref
+
+__all__ = ["paged_attention", "paged_attention_partial", "merge_partials"]
+
+
+def paged_attention_partial(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,
+    ctx_len: jnp.ndarray,
+    *,
+    sm_scale: float | None = None,
+    kernel_mode: str = "auto",
+):
+    """Residuals (acc, m, l) over the pages mapped by ``block_table``."""
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        return paged_attention_ref(
+            q, k_pool, v_pool, block_table, ctx_len,
+            sm_scale=sm_scale, return_residuals=True,
+        )
+    return paged_attention_pallas(
+        q, k_pool, v_pool, block_table, ctx_len,
+        sm_scale=sm_scale, interpret=(mode == "pallas_interpret"),
+    )
+
+
+def paged_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,
+    ctx_len: jnp.ndarray,
+    *,
+    sm_scale: float | None = None,
+    kernel_mode: str = "auto",
+) -> jnp.ndarray:
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        return paged_attention_ref(
+            q, k_pool, v_pool, block_table, ctx_len, sm_scale=sm_scale,
+        )
+    acc, m, l = paged_attention_pallas(
+        q, k_pool, v_pool, block_table, ctx_len,
+        sm_scale=sm_scale, interpret=(mode == "pallas_interpret"),
+    )
+    safe_l = jnp.where(l > 0, l, 1.0)
+    return (acc / safe_l[..., None]).astype(q.dtype)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for SPARTA paged decode attention."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # [B, Hq, D] — one new token per sequence
+    k_pool: jnp.ndarray,       # [slots, page, Hkv, D] physical KV pool
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, pages] int32 physical slot per logical page (-1 = unmapped)
+    ctx_len: jnp.ndarray,      # [B] int32 tokens of valid context
+    *,
+    sm_scale: float | None = None,
+    return_residuals: bool = False,
+):
+    """Gather-translate-attend oracle.
+
+    With ``return_residuals`` the un-normalised accumulator and the softmax
+    statistics (m, l) are returned for cross-partition merging — the
+    flash-style merge used by the SPARTA sequence-sharded ``serve_step``.
+    """
+    B, Hq, D = q.shape
+    slots, page, Hkv, _ = k_pool.shape
+    pages = block_table.shape[1]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+
+    safe_table = jnp.maximum(block_table, 0)
+    k = k_pool[safe_table]                 # [B, pages, page, Hkv, D]
+    v = v_pool[safe_table]
+    k = k.reshape(B, pages * page, Hkv, D)
+    v = v.reshape(B, pages * page, Hkv, D)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, k.astype(jnp.float32)) * scale
+
+    pos = jnp.arange(pages * page)[None, :]                      # [1, S]
+    valid = (pos < ctx_len[:, None]) & (
+        jnp.repeat(block_table >= 0, page, axis=1)
+    )                                                            # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+
+    m = s.max(axis=-1)                                           # [B, Hkv, G]
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+
+    if return_residuals:
+        return (
+            acc.reshape(B, Hq, D),
+            m.reshape(B, Hq),
+            l.reshape(B, Hq),
+        )
+    safe_l = jnp.where(l > 0, l, 1.0)
+    o = acc / safe_l[..., None]
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def merge_partials(
+    accs: jnp.ndarray,  # [P, B, Hq, D] unnormalised accumulators
+    ms: jnp.ndarray,    # [P, B, Hq]
+    ls: jnp.ndarray,    # [P, B, Hq]
+) -> jnp.ndarray:
+    """Merge per-partition flash partials into the final attention output."""
+    m = ms.max(axis=0)                       # [B, Hq]
+    alpha = jnp.exp(ms - m[None])            # [P, B, Hq]
+    l = (ls * alpha).sum(axis=0)
+    acc = (accs * alpha[..., None]).sum(axis=0)
+    safe_l = jnp.where(l > 0, l, 1.0)
+    return (acc / safe_l[..., None]).astype(accs.dtype)

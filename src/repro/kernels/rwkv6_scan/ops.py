@@ -1,0 +1,30 @@
+"""Public RWKV6 scan op with kernel-mode dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_mode
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+from repro.kernels.rwkv6_scan.ref import rwkv6_decode_step, rwkv6_scan_ref
+
+__all__ = ["rwkv6_scan", "rwkv6_decode_step"]
+
+
+def rwkv6_scan(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    *,
+    chunk: int = 32,
+    kernel_mode: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        return rwkv6_scan_ref(r, k, v, w, u)
+    return rwkv6_scan_pallas(
+        r, k, v, w, u, chunk=chunk, interpret=(mode == "pallas_interpret")
+    )

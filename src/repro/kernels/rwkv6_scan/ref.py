@@ -1,0 +1,66 @@
+"""Exact sequential oracle for the RWKV6 (Finch) recurrence.
+
+Per head (head size N), with receptance r, key k, value v, data-dependent
+per-channel decay w in (0, 1) and a learned bonus u:
+
+    a_t    = k_t (x) v_t                      (outer product, [N, N])
+    o_t[j] = sum_i r_t[i] (S[i,j] + u[i] a_t[i,j])
+    S      = diag(w_t) S + a_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(
+    r: jnp.ndarray,  # [B, H, T, N]
+    k: jnp.ndarray,  # [B, H, T, N]
+    v: jnp.ndarray,  # [B, H, T, N]
+    w: jnp.ndarray,  # [B, H, T, N] decay in (0, 1)
+    u: jnp.ndarray,  # [H, N] bonus
+    state: jnp.ndarray | None = None,  # [B, H, N, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (o [B,H,T,N], final_state [B,H,N,N])."""
+    B, H, T, N = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def head_scan(rh, kh, vh, wh, uh, s0):
+        def step(S, inp):
+            rt, kt, vt, wt = inp
+            a = kt[:, None] * vt[None, :]
+            o = ((S + uh[:, None] * a) * rt[:, None]).sum(axis=0)
+            S = wt[:, None] * S + a
+            return S, o
+
+        S, o = jax.lax.scan(step, s0, (rh, kh, vh, wh))
+        return o, S
+
+    f = jax.vmap(  # over B
+        jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0, 0)),  # over H
+        in_axes=(0, 0, 0, 0, None, 0),
+    )
+    o, S = f(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w.astype(jnp.float32), u.astype(jnp.float32), state.astype(jnp.float32),
+    )
+    return o.astype(r.dtype), S
+
+
+def rwkv6_decode_step(
+    r: jnp.ndarray,  # [B, H, N] single token
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,  # [H, N]
+    state: jnp.ndarray,  # [B, H, N, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) single-token step (the serve path — no KV cache, paper's
+    'SPARTA inapplicable to attention-free archs' case)."""
+    a = k[..., :, None] * v[..., None, :]
+    o = ((state + u[None, :, :, None] * a) * r[..., :, None]).sum(axis=-2)
+    state = w[..., :, None] * state + a
+    return o.astype(r.dtype), state

@@ -1,0 +1,1 @@
+from repro.kernels.tlb_sim.ops import tlb_sim  # noqa: F401

@@ -1,0 +1,86 @@
+"""Trace-driven TLB simulation as a Pallas TPU kernel.
+
+TPU adaptation of the paper's evaluation hot loop (millions of trace
+accesses x hundreds of configs).  The full TLB state (tags + last-use, a few
+hundred KB for even the largest configs) stays **resident in VMEM scratch**
+for the entire trace: TPU grids execute sequentially, so scratch persists
+across grid steps while each step streams one trace block HBM->VMEM.  The
+simulated per-partition TLB array (SPARTA's "divide") is the leading state
+dimension: probing partition p touches only rows [p*sets, (p+1)*sets).
+
+The access loop is inherently serial (LRU state carries a dependency), but
+each probe is a W-wide vector compare/select — the VPU lanes handle the
+ways.  The host-side oracle is ``repro.core.tlbsim._scan_tlb``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _tlb_kernel(
+    set_ref, tag_ref,     # int32 [BLK] trace block
+    hit_ref,              # int32 [BLK] output
+    tags_scr, last_scr,   # [TS, W] persistent VMEM state
+    *,
+    block: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        tags_scr[...] = jnp.full_like(tags_scr, -1)
+        last_scr[...] = jnp.zeros_like(last_scr)
+
+    base = i * block
+
+    def body(j, _):
+        s = set_ref[j]
+        t = tag_ref[j]
+        row_t = tags_scr[s, :]
+        row_l = last_scr[s, :]
+        hit_vec = row_t == t
+        hit = jnp.any(hit_vec)
+        way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+        tags_scr[s, way] = t
+        last_scr[s, way] = base + j + 1
+        hit_ref[j] = hit.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("total_sets", "ways", "block", "interpret"))
+def tlb_sim_pallas(
+    set_idx: jnp.ndarray,
+    tag: jnp.ndarray,
+    total_sets: int,
+    ways: int,
+    *,
+    block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = set_idx.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"trace length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    hits = pl.pallas_call(
+        functools.partial(_tlb_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((total_sets, ways), jnp.int32),
+            pltpu.VMEM((total_sets, ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )(set_idx.astype(jnp.int32), tag.astype(jnp.int32))
+    return hits.astype(bool)

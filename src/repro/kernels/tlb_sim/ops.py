@@ -1,0 +1,28 @@
+"""Public TLB-simulation op with kernel-mode dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_mode
+from repro.kernels.tlb_sim.kernel import tlb_sim_pallas
+from repro.kernels.tlb_sim.ref import tlb_sim_ref
+
+__all__ = ["tlb_sim"]
+
+
+def tlb_sim(
+    set_idx: jnp.ndarray,
+    tag: jnp.ndarray,
+    total_sets: int,
+    ways: int,
+    *,
+    block: int = 512,
+    kernel_mode: str = "auto",
+) -> jnp.ndarray:
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        return tlb_sim_ref(set_idx, tag, total_sets, ways)
+    return tlb_sim_pallas(
+        set_idx, tag, total_sets, ways,
+        block=block, interpret=(mode == "pallas_interpret"),
+    )

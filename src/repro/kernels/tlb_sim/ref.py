@@ -1,0 +1,11 @@
+"""Oracle for the TLB-simulation kernel = the scan in repro.core.tlbsim."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.tlbsim import _scan_tlb
+
+
+def tlb_sim_ref(set_idx: jnp.ndarray, tag: jnp.ndarray, total_sets: int, ways: int) -> jnp.ndarray:
+    """Per-access hit bits (bool) for a set-associative LRU structure."""
+    return _scan_tlb(set_idx, tag, total_sets, ways)

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this AOT-compiles the production step function against
+ShapeDtypeStruct inputs (no allocation), then records:
+
+* ``memory_analysis()``  — per-device bytes (proves the cell fits),
+* ``cost_analysis()``    — HLO FLOPs / bytes for the roofline,
+* collective bytes       — parsed from the optimized (post-SPMD) HLO:
+  all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+  result sizes, i.e. per-device collective traffic per step.
+
+Results land in ``benchmarks/_cache/dryrun/<arch>__<shape>__<mesh>.json``;
+``benchmarks/roofline.py`` and EXPERIMENTS.md read from that cache.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-12b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, SHAPES_BY_NAME, cell_applicable
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.serve.serve_step import make_serve_step
+from repro.train.optimizer import init_state
+from repro.train.train_step import make_prefill_step, make_train_step
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "_cache" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "u4": 1, "s4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str):
+    """Sum per-device result bytes of every collective op, by op kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        result_part = stripped[: m.end(1)]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_part):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        count[kind] += 1
+    return out, count
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes", "peak_memory_in_bytes",
+    )
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def _cost_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+               resume: bool = True, act_constraints: bool = False, tag: str = ""):
+    mesh_name = ("2x16x16" if multi_pod else "16x16") + tag
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    hlo_path = out_dir / f"{arch}__{shape_name}__{mesh_name}.hlo.gz"
+    if resume and out_path.exists() and hlo_path.exists():
+        rec = json.loads(out_path.read_text())
+        if rec.get("ok"):
+            print(f"[skip] {out_path.name} (cached)")
+            return rec
+
+    cfg = registry.get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise SystemExit(f"inapplicable cell: {why}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "chips": int(mesh.size), "ok": False,
+        "act_constraints": act_constraints,
+    }
+    t0 = time.time()
+    import contextlib
+    ctx = mesh if act_constraints else contextlib.nullcontext()  # `with mesh:` enables P-based constraints
+    if act_constraints:
+        shd.set_activation_policy(dp=shd.data_axes(multi_pod), tp="model",
+                                  tp_size=mesh.shape["model"])
+    if os.environ.get("REPRO_KV_WRITE_MODE"):
+        import repro.models.paged_global as _pg
+        _pg.WRITE_MODE = os.environ["REPRO_KV_WRITE_MODE"]
+        rec["kv_write_mode"] = _pg.WRITE_MODE
+    try:
+      with ctx:
+          if shape.lowers_serve_step:
+              n_part = 1
+              for ax in (shd.serve_partition_axes(shape, multi_pod=multi_pod),):
+                  axes = ax if isinstance(ax, tuple) else (ax,)
+                  for a in axes:
+                      n_part *= mesh.shape[a]
+              specs = registry.input_specs(cfg, shape, num_partitions=n_part)
+              aparams = registry.abstract_params(cfg)
+              pspecs = shd.param_specs(aparams, cfg, mode="serve", multi_pod=multi_pod)
+              ispecs = shd.serve_input_specs(cfg, shape, multi_pod=multi_pod)
+              ospec_logits, ospec_state = shd.serve_output_specs(cfg, shape, multi_pod=multi_pod)
+              step = make_serve_step(cfg, kernel_mode="reference")
+              jitted = jax.jit(
+                  step,
+                  in_shardings=(_named(mesh, pspecs), _named(mesh, ispecs)),
+                  out_shardings=(NamedSharding(mesh, ospec_logits), _named(mesh, ospec_state)),
+                  donate_argnums=(1,),
+              )
+              lowered = jitted.lower(aparams, specs)
+          elif shape.kind == "prefill":
+              specs = registry.input_specs(cfg, shape)
+              aparams = registry.abstract_params(cfg)
+              pspecs = shd.param_specs(aparams, cfg, mode="train", multi_pod=multi_pod)
+              bspecs = shd.batch_specs(cfg, shape, multi_pod=multi_pod)
+              dp = shd.data_axes(multi_pod)
+              step = make_prefill_step(cfg, kernel_mode="reference")
+              jitted = jax.jit(
+                  step,
+                  in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+                  out_shardings=NamedSharding(mesh, P(dp, "model")),
+              )
+              lowered = jitted.lower(aparams, specs)
+          else:  # train
+              specs = registry.input_specs(cfg, shape)
+              aparams = registry.abstract_params(cfg)
+              aopt = jax.eval_shape(init_state, aparams)
+              pspecs = shd.param_specs(aparams, cfg, mode="train", multi_pod=multi_pod)
+              ospecs = shd.opt_state_specs(aparams, cfg, multi_pod=multi_pod)
+              bspecs = shd.batch_specs(cfg, shape, multi_pod=multi_pod)
+              step = make_train_step(cfg, kernel_mode="reference")
+              mspec = {"loss": P(), "grad_norm": P(), "lr": P()}
+              jitted = jax.jit(
+                  step,
+                  in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, bspecs)),
+                  out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, mspec)),
+                  donate_argnums=(0, 1),
+              )
+              lowered = jitted.lower(aparams, aopt, specs)
+          rec["lower_s"] = round(time.time() - t0, 1)
+
+          t1 = time.time()
+          compiled = lowered.compile()
+          rec["compile_s"] = round(time.time() - t1, 1)
+
+          rec["memory"] = _mem_dict(compiled)
+          rec["cost"] = _cost_dict(compiled)
+          hlo_text = compiled.as_text()
+          coll, coll_n = collective_bytes(hlo_text)
+          rec["collective_bytes"] = coll
+          rec["collective_count"] = coll_n
+          # Archive the optimized HLO for offline analysis (loop-aware
+          # collective accounting, hillclimb diffs) — benchmarks/roofline.py.
+          import gzip
+          out_dir.mkdir(parents=True, exist_ok=True)
+          with gzip.open(out_dir / f"{arch}__{shape_name}__{mesh_name}.hlo.gz", "wt") as f:
+              f.write(hlo_text)
+          rec["input_bytes"] = int(sum(
+              v.size * v.dtype.itemsize for v in jax.tree.leaves(specs)
+          ))
+          rec["param_count"] = int(sum(x.size for x in jax.tree.leaves(aparams)))
+          rec["ok"] = True
+          print(f"[ok] {arch} x {shape_name} x {mesh_name}: "
+                f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                f"flops={rec['cost'].get('flops', 0):.3g} "
+                f"coll={sum(coll.values())/2**20:.1f}MiB")
+    except Exception as e:  # noqa: BLE001 — recorded, not swallowed
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_name}: {rec['error']}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    shd.clear_activation_policy()
+    jax.clear_caches()  # keep the 80-cell sweep's RSS bounded
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16", "both"])
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--act-constraints", action="store_true",
+                    help="perf iteration: explicit activation sharding")
+    ap.add_argument("--tag", default="", help="suffix for output filenames")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    archs = registry.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "2x16x16"]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = registry.get_config(arch)
+        for sname in shapes:
+            ok, _ = cell_applicable(cfg, SHAPES_BY_NAME[sname])
+            if not ok:
+                continue
+            for mp in meshes:
+                rec = lower_cell(arch, sname, mp, out_dir, resume=not args.no_resume,
+                                 act_constraints=args.act_constraints, tag=args.tag)
+                n_ok += int(rec.get("ok", False))
+                n_fail += int(not rec.get("ok", False))
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Training launcher: real devices (or forced-host meshes for rehearsal).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+      --steps 50 --mesh 2x4
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, batch_for_model
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.runtime.fault_tolerance import (
+    HeartbeatTracker, LoopConfig, PreemptionHandler, run_training_loop,
+)
+from repro.train.optimizer import OptimizerConfig, init_state
+from repro.train.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default="", help="e.g. 2x4 (data x model); default single device")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get_config(args.arch)
+    params = models.init(jax.random.PRNGKey(0), cfg)
+    opt = init_state(params)
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                              total_steps=args.steps)
+    step = make_train_step(cfg, opt_cfg, microbatches=args.microbatches)
+
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
+        pspecs = shd.param_specs(params, cfg, mode="train")
+        ospecs = shd.opt_state_specs(params, cfg)
+        nps = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        nos = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        params = jax.tree.map(jax.device_put, params, nps)
+        opt = jax.tree.map(jax.device_put, opt, nos)
+        step = jax.jit(step, in_shardings=(nps, nos, NamedSharding(mesh, P("data", None))),
+                       out_shardings=(nps, nos, None))
+    else:
+        step = jax.jit(step)
+
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                      global_batch=args.global_batch,
+                      num_hosts=jax.process_count(), host_id=jax.process_index())
+
+    def batch_fn(i):
+        return {k: jnp.asarray(v) for k, v in batch_for_model(data, cfg, i).items()}
+
+    tracker = HeartbeatTracker()
+    state, stopped = run_training_loop(
+        step, (params, opt), batch_fn, args.ckpt,
+        LoopConfig(total_steps=args.steps, checkpoint_every=max(args.steps // 5, 1)),
+        tracker=tracker, preemption=PreemptionHandler(),
+        on_metrics=lambda s, m: (s % 10 == 0) and print(
+            f"step {s}: loss {float(m['loss']):.4f} lr {float(m['lr']):.2e}"),
+    )
+    print(f"done at step {stopped}; checkpoints in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

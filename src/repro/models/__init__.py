@@ -1,0 +1,46 @@
+"""Model zoo: family dispatch for init / forward / loss / decode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cross_entropy
+
+
+def get_family_module(cfg: ModelConfig):
+    from repro.models import rwkv6, transformer, vlm, whisper, zamba2
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "ssm": rwkv6,
+        "hybrid": zamba2,
+        "encdec": whisper,
+        "vlm": vlm,
+    }[cfg.family]
+
+
+def init(key, cfg: ModelConfig):
+    return get_family_module(cfg).init(key, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig, **kw):
+    """batch: dict with family-specific inputs; returns (logits, aux)."""
+    mod = get_family_module(cfg)
+    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        return mod.forward(params, batch["tokens"], cfg, **kw)
+    return mod.forward(params, batch, cfg, **kw)
+
+
+def forward_hidden(params, batch, cfg: ModelConfig, **kw):
+    mod = get_family_module(cfg)
+    if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+        return mod.forward_hidden(params, batch["tokens"], cfg, **kw)
+    return mod.forward_hidden(params, batch, cfg, **kw)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, ce_block: int = 512, **kw) -> jnp.ndarray:
+    """Next-token loss via vocab-safe chunked cross-entropy."""
+    from repro.models.losses import chunked_cross_entropy
+    hidden, head, aux = forward_hidden(params, batch, cfg, **kw)
+    labels = batch["labels"] if "labels" in batch else batch["tokens"]
+    return chunked_cross_entropy(hidden[:, :-1], head, labels[:, 1:], block=ce_block) + aux

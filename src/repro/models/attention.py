@@ -1,0 +1,111 @@
+"""Attention block: GQA + RoPE + optional qk-norm; train and decode paths."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention_partial
+from repro.models.layers import Params, apply_rope, dense_init, rmsnorm
+
+
+def attention_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(
+    p: Params, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, D] -> q [B, T, Hq, hd], k/v [B, T, Hkv, hd] (RoPE applied)."""
+    B, T, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.distributed.sharding import constrain_bthd
+    q = constrain_bthd(q, cfg.num_heads)
+    k = constrain_bthd(k, cfg.num_kv_heads)
+    v = constrain_bthd(v, cfg.num_kv_heads)
+    return q, k, v
+
+
+def attention_forward(
+    p: Params,
+    x: jnp.ndarray,  # [B, T, D]
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn
+    kernel_mode: str = "auto",
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    o = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, kernel_mode=kernel_mode,
+    )  # [B, Hq, T, hd]
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, cfg.q_dim)
+    return o @ p["wo"]
+
+
+def cross_kv(p: Params, enc: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Encoder K/V for cross-attention (no RoPE on whisper cross-attn)."""
+    B, S, _ = enc.shape
+    k = (enc @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def attention_decode_paged(
+    p: Params,
+    x: jnp.ndarray,                 # [B, 1, D] new token activations
+    cfg: ModelConfig,
+    k_pool: jnp.ndarray,            # [slots, page, Hkv, hd] (this partition's pool)
+    v_pool: jnp.ndarray,
+    block_table: jnp.ndarray,       # [B, pages_local] local slots
+    ctx_len: jnp.ndarray,           # [B] total context (incl. new token)
+    *,
+    kernel_mode: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step against a SPARTA-paged KV pool partition.
+
+    Returns (attn residuals (acc, m, l) for cross-partition merge, plus the
+    new (k, v) row to be written by the owning partition).
+    """
+    B = x.shape[0]
+    positions = (ctx_len - 1)[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    acc, m, l = paged_attention_partial(
+        q[:, 0], k_pool, v_pool, block_table, ctx_len, kernel_mode=kernel_mode,
+    )
+    return acc, m, l, k[:, 0], v[:, 0]
+
+
+def finish_decode_attention(p: Params, merged: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """merged: [B, Hq, hd] -> output projection -> [B, 1, D]."""
+    B = merged.shape[0]
+    return (merged.reshape(B, 1, cfg.q_dim).astype(p["wo"].dtype)) @ p["wo"]

@@ -1,0 +1,70 @@
+"""Memory-efficient (flash-style) attention in pure jnp.
+
+The XLA-compiled counterpart of the Pallas flash kernel: a ``lax.scan`` over
+KV blocks with running log-sum-exp statistics, so peak memory is
+O(B x H x Tq x block_k) instead of O(Tq x Tk).  This is the ``reference``
+execution path used inside training/prefill graphs on CPU and in the
+dry-run; it matches ``kernels/flash_attention/ref.py`` exactly (tested), and
+the Pallas kernel replaces it on real TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_jnp(
+    q: jnp.ndarray,  # [B, Hq, Tq, D]
+    k: jnp.ndarray,  # [B, Hkv, Tk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_k: int = 512,
+) -> jnp.ndarray:
+    B, Hq, Tq, D = q.shape
+    _, Hkv, Tk, _ = k.shape
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    block_k = min(block_k, Tk)
+
+    nb = -(-Tk // block_k)
+    pad = nb * block_k - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(B, Hkv, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, Tq, D)
+    q_pos = (jnp.arange(Tq) + (Tk - Tq))[:, None]          # decode alignment
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, start = xs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kc.astype(jnp.float32)) * scale
+        k_pos = start + jnp.arange(block_k)[None, :]
+        mask = k_pos < Tk
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Tq, D), jnp.float32)
+    starts = jnp.arange(nb) * block_k
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, starts))
+    safe_l = jnp.where(l > 0, l, 1.0)
+    o = (acc / safe_l[..., None]).reshape(B, Hq, Tq, D)
+    return o.astype(q.dtype)

@@ -1,0 +1,108 @@
+"""Common model building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# -- initialisers -----------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# -- norms ------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_params(key, d: int, kind: str) -> Params:
+    if kind == "rms":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "rms":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+# -- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                 # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., T, D/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., T, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP --------------------------------------------------------------------
+
+def mlp_params(key, d: int, f: int, activation: str, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    if activation.endswith("_glu"):
+        return {
+            "w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype),
+        }
+    return {"w_up": dense_init(ks[0], d, f, dtype), "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def mlp_forward(p: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "silu_glu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif activation == "gelu_glu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    else:
+        raise ValueError(activation)
+    return h @ p["w_down"]
+
+
+# -- losses -----------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross entropy; logits [..., V] f32-upcast."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,43 @@
+"""Chunked (vocab-safe) cross-entropy.
+
+Materialising [B, T, V] logits is impossible at production shapes (qwen3
+train_4k would need 2.5 TB/device in f32).  The loss therefore scans over
+sequence blocks: each block computes its [B, block, V] logits (sharded
+B->data, V->model), reduces to per-token NLL, and discards them; the block
+body is rematerialised in the backward pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_cross_entropy(
+    hidden: jnp.ndarray,   # [B, T, D] final (normed) hidden states
+    head: jnp.ndarray,     # [D, V]
+    labels: jnp.ndarray,   # [B, T] targets aligned with hidden positions
+    *,
+    block: int = 512,
+) -> jnp.ndarray:
+    B, T, D = hidden.shape
+    block = min(block, T)
+    nb = -(-T // block)
+    pad = nb * block - T
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hb = hidden.reshape(B, nb, block, D).transpose(1, 0, 2, 3)
+    yb = labels.reshape(B, nb, block).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, y = xs
+        logits = (h @ head).astype(jnp.float32)            # [B, blk, V]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        valid = (y >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), (hb, yb))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,101 @@
+"""Mamba2 block (SSD) — used standalone and inside the Zamba2 hybrid."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.mamba2_scan import mamba2_decode_step, mamba2_scan
+from repro.models.layers import Params, dense_init, norm_params, rmsnorm
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, n_heads, head_dim, ssm_state)."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_headdim
+    assert d_inner % P == 0
+    return d_inner, d_inner // P, P, cfg.ssm_state
+
+
+def block_params(key, cfg: ModelConfig, dtype) -> Params:
+    D = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": norm_params(ks[0], D, "rms"),
+        "in_proj": dense_init(ks[1], D, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv_width, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 8.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.zeros((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[3], d_inner, D, dtype),
+    }
+
+
+def _split_proj(u: jnp.ndarray, cfg: ModelConfig):
+    d_inner, H, P, N = dims(cfg)
+    z, xBC, dt = jnp.split(u, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state: jnp.ndarray | None = None):
+    """Depthwise causal conv over time.  xBC [B, T, C]; w [W, C].
+
+    Returns (activated output, new conv state = last W-1 inputs)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)             # [B, T+W-1, C]
+    out = sum(xp[:, i : i + xBC.shape[1]] * w[i] for i in range(W))
+    out = jax.nn.silu(out + b.astype(out.dtype))
+    return out, xp[:, -(W - 1):].astype(jnp.float32)
+
+
+def block_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  kernel_mode: str = "auto", state=None):
+    """x [B, T, D] -> (out [B, T, D], new state dict) — pre-norm residual block.
+
+    ``state`` (conv + ssm) enables T=1 decode; None = training/prefill."""
+    B, T, D = x.shape
+    d_inner, H, P, N = dims(cfg)
+    h = rmsnorm(x, p["norm"]["scale"])
+    z, xBC, dt_raw = _split_proj(h @ p["in_proj"], cfg)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, C = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(B, T, H, P).transpose(0, 2, 1, 3)    # [B, H, T, P]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"]).transpose(0, 2, 1)  # [B, H, T]
+    A = -jnp.exp(p["A_log"])
+
+    if T == 1 and state is not None:
+        y, new_ssm = mamba2_decode_step(
+            xs[:, :, 0], dt[:, :, 0], A, Bm[:, 0].astype(jnp.float32),
+            C[:, 0].astype(jnp.float32), p["D"], state["ssm"],
+        )
+        y = y[:, :, None, :]
+    else:
+        y, new_ssm = mamba2_scan(
+            xs, dt, A, Bm.astype(jnp.float32), C.astype(jnp.float32), p["D"],
+            kernel_mode=kernel_mode,
+        )
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d_inner)
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    y = rmsnorm(y, p["gate_norm"])
+    out = x + (y.astype(x.dtype) @ p["out_proj"])
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_block_state(cfg: ModelConfig, batch: int):
+    d_inner, H, P, N = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner + 2 * N), jnp.float32),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with capacity bound.
+
+Dispatch is the sort-based "dropping" formulation: assignments are sorted by
+expert, ranked within expert (capacity C drops the overflow), gathered into
+an [E, C, D] buffer, run through batched expert matmuls, and combined with
+the router weights.  Expert weights shard over the mesh ``model`` axis (EP);
+the token buffers shard over ``data`` — GSPMD inserts the all-to-alls.
+A manual shard_map EP variant (local sort + explicit all_to_all) lives in
+``repro.distributed.collectives`` and is the §Perf hillclimb for the MoE
+cells.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init
+
+
+def moe_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    moe = cfg.moe
+    ks = jax.random.split(key, 4)
+    E, D, F = moe.num_experts, cfg.d_model, moe.d_ff_expert
+    # Per-expert GLU weights, stacked on the expert axis.
+    def stack_init(k, d_in, d_out):
+        keys = jax.random.split(k, E)
+        return jnp.stack([dense_init(kk, d_in, d_out, dtype) for kk in keys])
+
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": stack_init(ks[1], D, F),
+        "w_up": stack_init(ks[2], D, F),
+        "w_down": stack_init(ks[3], F, D),
+    }
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    moe = cfg.moe
+    c = int(tokens * moe.top_k * moe.capacity_factor / moe.num_experts)
+    return max(8, c)
+
+
+def moe_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, D] -> (out [B, T, D], aux load-balance loss scalar)."""
+    moe = cfg.moe
+    B, T, D = x.shape
+    E, K = moe.num_experts, moe.top_k
+    tokens = B * T
+    C = _capacity(tokens, cfg)
+
+    xf = x.reshape(tokens, D)
+    gates = jax.nn.softmax((xf.astype(jnp.float32) @ p["router"]), axis=-1)  # [T, E]
+    weights, ids = jax.lax.top_k(gates, K)                                   # [T, K]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # Aux load-balance loss (Switch-style): E * sum_e f_e * P_e.
+    me = gates.mean(axis=0)                                                  # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (tokens * K)
+    aux = moe.router_aux_weight * E * jnp.sum(me * ce)
+
+    # Sort assignments by expert; rank within expert; drop rank >= C.
+    flat_ids = ids.reshape(-1)                                               # [T*K]
+    sort = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[sort]
+    tk = tokens * K
+    pos = jnp.arange(tk, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    rank = pos - seg_start                                                   # rank within expert
+    keep = rank < C
+    slot = sorted_ids * C + jnp.minimum(rank, C - 1)                         # [T*K]
+
+    token_of = sort // K                                                     # source token per assignment
+    # Dispatch: [E*C, D] buffer (dropped assignments never written).
+    buf = jnp.zeros((E * C, D), x.dtype)
+    buf = buf.at[jnp.where(keep, slot, E * C)].set(xf[token_of], mode="drop")
+    h = buf.reshape(E, C, D)
+
+    # Expert GLU FFN: batched over experts (EP shards this einsum).
+    if cfg.activation == "gelu_glu":
+        act = lambda z: jax.nn.gelu(z, approximate=True)
+    else:
+        act = jax.nn.silu
+    hg = act(jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(x.dtype)))
+    hu = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(x.dtype))
+    ho = jnp.einsum("ecf,efd->ecd", hg * hu, p["w_down"].astype(x.dtype))
+    ho = ho.reshape(E * C, D)
+
+    # Combine: weighted scatter-add back to tokens.
+    w_flat = weights.reshape(-1)[sort]                                       # [T*K] sorted order
+    contrib = ho[jnp.minimum(slot, E * C - 1)] * jnp.where(keep, w_flat, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((tokens, D), x.dtype).at[token_of].add(contrib)
+    return out.reshape(B, T, D), aux

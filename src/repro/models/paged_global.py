@@ -1,0 +1,167 @@
+"""Global-view SPARTA paged attention: the partition axis is EXPLICIT.
+
+The distributed serve path keeps KV pools as ``[B, P, pages_local, page,
+Hkv, hd]`` where ``P`` is the number of SPARTA partitions, mapped 1:1 onto
+mesh devices by sharding dim 1 (``PartitionSpec(..., 'model', ...)``).
+Because every gather uses a *local* block table indexed within its own
+partition (``take_along_axis`` on the pages_local dim), GSPMD never has to
+move pages across partitions — the compiled program does per-device
+translate+fetch and ONE cross-partition merge of flash softmax partials
+(max/sum reductions over the P dim).  That is precisely the paper's
+schedule: local page-table walk, local data fetch, overlap, single response.
+
+The Pallas kernel in ``repro.kernels.paged_attention`` is the per-device TPU
+hot path for this same math (used via shard_map in the serving engine); this
+module is its GSPMD-friendly global formulation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import Params, apply_norm, mlp_forward
+
+NEG_INF = -1e30
+
+
+def local_ctx_all_partitions(ctx: jnp.ndarray, P: int, page: int) -> jnp.ndarray:
+    """[B] global ctx -> [B, P] per-partition packed valid-token counts."""
+    from repro.models.transformer import local_ctx_from_global
+    parts = jnp.arange(P, dtype=jnp.int32)
+    return jax.vmap(
+        lambda p: local_ctx_from_global(ctx, p, P, page), out_axes=1
+    )(parts)
+
+
+def paged_attention_global(
+    q: jnp.ndarray,          # [B, Hq, hd] (new token)
+    k_pool: jnp.ndarray,     # [B, P, pages_local, page, Hkv, hd]
+    v_pool: jnp.ndarray,
+    tables: jnp.ndarray,     # [B, P, pages_local] local slots (-1 = unmapped)
+    ctx: jnp.ndarray,        # [B] context length EXCLUDING the new token
+    *,
+    extra_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # new token K/V [B, Hkv, hd]
+) -> jnp.ndarray:
+    """Returns merged attention output [B, Hq, hd] (f32)."""
+    B, P, pl, page, Hkv, hd = k_pool.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+
+    idx = jnp.maximum(tables, 0)[..., None, None, None]          # [B,P,pl,1,1,1]
+    k = jnp.take_along_axis(k_pool, idx, axis=2)                 # local gather
+    v = jnp.take_along_axis(v_pool, idx, axis=2)
+    k = k.reshape(B, P, pl * page, Hkv, hd)
+    v = v.reshape(B, P, pl * page, Hkv, hd)
+
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bpshd->bphgs", qf, k.astype(jnp.float32)) * scale
+
+    local_ctx = local_ctx_all_partitions(ctx, P, page)           # [B, P]
+    pos = jnp.arange(pl * page, dtype=jnp.int32)
+    valid = pos[None, None] < local_ctx[..., None]               # [B, P, S]
+    valid &= jnp.repeat(tables >= 0, page, axis=-1)
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+
+    m = s.max(axis=-1)                                           # [B, P, Hkv, G]
+    p_ = jnp.exp(s - m[..., None])
+    p_ = jnp.where(valid[:, :, None, None, :], p_, 0.0)
+    l = p_.sum(axis=-1)
+    acc = jnp.einsum("bphgs,bpshd->bphgd", p_, v.astype(jnp.float32))
+
+    if extra_kv is not None:
+        k1, v1 = extra_kv                                        # the hot tail
+        s1 = jnp.einsum("bhgd,bhd->bhg", qf, k1.astype(jnp.float32)) * scale
+        m = jnp.concatenate([m, s1[:, None]], axis=1)
+        l = jnp.concatenate([l, jnp.ones_like(s1)[:, None]], axis=1)
+        acc1 = jnp.broadcast_to(v1.astype(jnp.float32)[:, :, None, :], (B, Hkv, G, hd))
+        acc = jnp.concatenate([acc, acc1[:, None]], axis=1)
+
+    # SPARTA merge: one reduction over the partition axis.
+    m_g = m.max(axis=1)                                          # [B, Hkv, G]
+    alpha = jnp.exp(m - m_g[:, None])
+    l_g = (l * alpha).sum(axis=1)
+    acc_g = (acc * alpha[..., None]).sum(axis=1)
+    safe_l = jnp.where(l_g > 0, l_g, 1.0)
+    return (acc_g / safe_l[..., None]).reshape(B, Hq, hd)
+
+
+# Write formulation for the new token's KV row: "where" (masked broadcast —
+# reads+writes the whole pool; always partition-local under GSPMD) or
+# "scatter" (one-row write; perf iteration, EXPERIMENTS.md §Perf cell B).
+WRITE_MODE = "scatter"  # default since perf cell B (was "where"); both tested
+
+
+def write_kv_global(
+    pool: jnp.ndarray,       # [B, P, pages_local, page, Hkv, hd]
+    tables: jnp.ndarray,     # [B, P, pages_local]
+    new_kv: jnp.ndarray,     # [B, Hkv, hd]
+    ctx: jnp.ndarray,        # [B] ctx INCLUDING the new token
+    page: int,
+) -> jnp.ndarray:
+    """Write the new token into its owning partition's pool.
+
+    The page's *slot* comes from the local table — demand-allocated anywhere
+    in the partition (paper §5).
+    """
+    B, P, pl, pg, Hkv, hd = pool.shape
+    gpage = (ctx - 1) // page                                    # [B] logical page
+    owner = (gpage % P).astype(jnp.int32)
+    lpage = (gpage // P).astype(jnp.int32)
+    slot = jnp.take_along_axis(
+        tables[jnp.arange(B), owner], lpage[:, None], axis=1
+    )[:, 0]                                                      # [B]
+    off = ((ctx - 1) % page).astype(jnp.int32)
+
+    if WRITE_MODE == "scatter":
+        b_idx = jnp.arange(B)
+        safe_slot = jnp.maximum(slot, 0)
+        return pool.at[b_idx, owner, safe_slot, off].set(
+            new_kv.astype(pool.dtype), mode="drop",
+        )
+    pi = jax.lax.broadcasted_iota(jnp.int32, (B, P, pl, pg), 1)
+    si = jax.lax.broadcasted_iota(jnp.int32, (B, P, pl, pg), 2)
+    oi = jax.lax.broadcasted_iota(jnp.int32, (B, P, pl, pg), 3)
+    mask = (
+        (pi == owner[:, None, None, None])
+        & (si == slot[:, None, None, None])
+        & (oi == off[:, None, None, None])
+    )[..., None, None]
+    return jnp.where(mask, new_kv[:, None, None, None].astype(pool.dtype), pool)
+
+
+def decode_block_global(
+    lp: Params,
+    x: jnp.ndarray,            # [B, 1, D]
+    cfg: ModelConfig,
+    k_pool: jnp.ndarray,       # [B, P, pages_local, page, Hkv, hd]
+    v_pool: jnp.ndarray,
+    tables: jnp.ndarray,
+    ctx_len: jnp.ndarray,      # [B] incl. new token
+    *,
+    skip_mlp: bool = False,
+):
+    """One layer of global-view paged decode (dense/MoE/shared-attn)."""
+    page = cfg.kv_page_size
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    q, k, v = attn._project_qkv(lp["attn"], h, cfg, (ctx_len - 1)[:, None])
+    k_new, v_new = k[:, 0], v[:, 0]
+    merged = paged_attention_global(
+        q[:, 0], k_pool, v_pool, tables, ctx_len - 1, extra_kv=(k_new, v_new),
+    )
+    k_pool = write_kv_global(k_pool, tables, k_new, ctx_len, page)
+    v_pool = write_kv_global(v_pool, tables, v_new, ctx_len, page)
+    x = x + attn.finish_decode_attention(lp["attn"], merged, cfg)
+    if skip_mlp:
+        return x, k_pool, v_pool
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        from repro.models import moe as moe_lib
+        y, _ = moe_lib.moe_forward(lp["moe"], h, cfg)
+    else:
+        y = mlp_forward(lp["mlp"], h, cfg.activation)
+    return x + y, k_pool, v_pool

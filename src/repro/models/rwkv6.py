@@ -1,0 +1,187 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent per-channel decay.
+
+Per §Arch-applicability (DESIGN.md): RWKV6 has no KV cache, so the SPARTA
+paged-KV serving technique is inapplicable; decode carries O(1) recurrent
+state.  The arch still runs every shape (including long_500k, which is the
+whole point of an SSM) without the technique.
+
+Block = time-mix (the rwkv6_scan kernel) + channel-mix, both with token
+shift.  The decay LoRA follows the paper: w = exp(-exp(w_base + tanh(x A) B)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.rwkv6_scan import rwkv6_decode_step, rwkv6_scan
+from repro.models.layers import (
+    Params, apply_norm, dense_init, dtype_of, embed_init, norm_params,
+)
+
+LORA_RANK = 64
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    n = cfg.ssm_headdim  # head size (64)
+    assert cfg.d_model % n == 0
+    return cfg.d_model // n, n
+
+
+def layer_params(key, cfg: ModelConfig, dtype) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    H, N = _heads(cfg)
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": norm_params(ks[0], D, cfg.norm),
+        "ln2": norm_params(ks[1], D, cfg.norm),
+        "tm": {
+            "mu": jnp.full((5, D), 0.5, jnp.float32),  # r, k, v, w, g shifts
+            "wr": dense_init(ks[2], D, D, dtype),
+            "wk": dense_init(ks[3], D, D, dtype),
+            "wv": dense_init(ks[4], D, D, dtype),
+            "wg": dense_init(ks[5], D, D, dtype),
+            "w_base": jnp.full((D,), -1.0, jnp.float32),
+            "w_lora_a": dense_init(ks[6], D, LORA_RANK, dtype),
+            "w_lora_b": (dense_init(ks[7], LORA_RANK, D, jnp.float32) * 0.1),
+            "u": jnp.zeros((H, N), jnp.float32),
+            "head_norm": jnp.zeros((D,), jnp.float32),
+            "wo": dense_init(ks[8], D, D, dtype),
+        },
+        "cm": {
+            "mu": jnp.full((2, D), 0.5, jnp.float32),  # k, r shifts
+            "wk": dense_init(ks[9], D, F, dtype),
+            "wv": dense_init(ks[10], F, D, dtype),
+            "wr": dense_init(ks[11], D, D, dtype),
+        },
+    }
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_layers, k_fin, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    return {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: layer_params(k, cfg, dtype))(layer_keys),
+        "final_norm": norm_params(k_fin, cfg.d_model, cfg.norm),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _shift(x: jnp.ndarray, last: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token shift: previous token's activation (zeros / carry at t=0)."""
+    if last is None:
+        return jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    return jnp.concatenate([last[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _decay(tm: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    lora = jnp.tanh(xw @ tm["w_lora_a"]).astype(jnp.float32) @ tm["w_lora_b"]
+    return jnp.exp(-jnp.exp(tm["w_base"] + lora))  # (0, 1), per channel
+
+
+def _time_mix(tm: Params, x: jnp.ndarray, cfg: ModelConfig, kernel_mode: str,
+              shift_state=None, wkv_state=None):
+    B, T, D = x.shape
+    H, N = _heads(cfg)
+    xs = _shift(x, shift_state)
+    mu = tm["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (xs - x) for i in range(5))
+    r = (xr @ tm["wr"]).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    k = (xk @ tm["wk"]).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    v = (xv @ tm["wv"]).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    w = _decay(tm, xw).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ tm["wg"])
+    if T == 1 and wkv_state is not None:
+        o, new_state = rwkv6_decode_step(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0], tm["u"], wkv_state
+        )
+        o = o[:, :, None, :]
+    else:
+        o, new_state = rwkv6_scan(r, k, v, w.astype(jnp.float32), tm["u"], kernel_mode=kernel_mode)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+    # Per-head normalisation (GroupNorm in the reference implementation).
+    o = o.reshape(B, T, H, N)
+    o = o * jax.lax.rsqrt(jnp.mean(o.astype(jnp.float32) ** 2, axis=-1, keepdims=True) + 1e-6)
+    o = (o.reshape(B, T, D) * (1.0 + tm["head_norm"])).astype(x.dtype)
+    out = ((o * g.astype(o.dtype)) @ tm["wo"]).astype(x.dtype)
+    return out, x[:, -1, :].astype(jnp.float32), new_state
+
+
+def _channel_mix(cm: Params, x: jnp.ndarray, shift_state=None):
+    xs = _shift(x, shift_state)
+    mu = cm["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"]))
+    out = (jax.nn.sigmoid(xr @ cm["wr"]) * (k @ cm["wv"])).astype(x.dtype)
+    return out, x[:, -1, :].astype(jnp.float32)
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            kernel_mode: str = "auto", remat: bool = True):
+    x = params["embed"][tokens]
+
+    def block(x, lp):
+        h, _, _ = _time_mix(lp["tm"], apply_norm(lp["ln1"], x, cfg.norm), cfg, kernel_mode)
+        x = x + h
+        h, _ = _channel_mix(lp["cm"], apply_norm(lp["ln2"], x, cfg.norm))
+        return x + h, jnp.float32(0.0)
+
+    blk = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(lambda c, lp: blk(c, lp), x, params["layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x @ params["lm_head"], jnp.float32(0.0)
+
+
+def forward_hidden(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                   kernel_mode: str = "auto", remat: bool = True):
+    x = params["embed"][tokens]
+
+    def block(x, lp):
+        h, _, _ = _time_mix(lp["tm"], apply_norm(lp["ln1"], x, cfg.norm), cfg, kernel_mode)
+        x = x + h
+        h, _ = _channel_mix(lp["cm"], apply_norm(lp["ln2"], x, cfg.norm))
+        return x + h, jnp.float32(0.0)
+
+    blk = jax.checkpoint(block) if remat else block
+    x, _ = jax.lax.scan(lambda c, lp: blk(c, lp), x, params["layers"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, params["lm_head"], jnp.float32(0.0)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    H, N = _heads(cfg)
+    L, D = cfg.num_layers, cfg.d_model
+    return {
+        "tm_shift": jnp.zeros((L, batch, D), jnp.float32),
+        "cm_shift": jnp.zeros((L, batch, D), jnp.float32),
+        "wkv": jnp.zeros((L, batch, H, N, N), jnp.float32),
+    }
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, state, *,
+                kernel_mode: str = "auto"):
+    """O(1) per-token decode — state size is independent of context length."""
+    x = params["embed"][tokens][:, None, :]
+
+    def body(x, scanned):
+        lp, tm_s, cm_s, wkv_s = scanned
+        h, tm_new, wkv_new = _time_mix(
+            lp["tm"], apply_norm(lp["ln1"], x, cfg.norm), cfg, kernel_mode,
+            shift_state=tm_s, wkv_state=wkv_s,
+        )
+        x = x + h
+        h, cm_new = _channel_mix(lp["cm"], apply_norm(lp["ln2"], x, cfg.norm), shift_state=cm_s)
+        return x + h, (tm_new, cm_new, wkv_new)
+
+    x, (tm_s, cm_s, wkv_s) = jax.lax.scan(
+        body, x, (params["layers"], state["tm_shift"], state["cm_shift"], state["wkv"])
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, {"tm_shift": tm_s, "cm_shift": cm_s, "wkv": wkv_s}

@@ -1,0 +1,334 @@
+"""Unified decoder-only transformer (dense + MoE), scan-over-layers.
+
+Covers stablelm-12b, qwen3-14b, starcoder2-7b, gemma-7b, qwen3-moe-30b-a3b,
+dbrx-132b, and the LM backbone of internvl2-2b.  Layer weights are stacked on
+a leading [L] axis and the body is a (rematerialised) ``lax.scan`` — constant
+HLO size in depth, which keeps 40-layer x 512-device dry-run compiles cheap.
+
+Three entry points:
+* :func:`forward`          — training / prefill logits.
+* :func:`prefill_with_kv`  — prefill that also emits page-layout KV.
+* :func:`decode_block` / :func:`decode_step` — single-token decode against
+  SPARTA-paged KV pools; ``axis_name`` enables the cross-partition merge
+  (sequence-sharded SPARTA serving — see repro/serve/serve_step.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import merge_partials
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    Params, apply_norm, dense_init, dtype_of, embed_init, mlp_forward,
+    mlp_params, norm_params,
+)
+
+
+def layer_params(key, cfg: ModelConfig, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": norm_params(ks[0], cfg.d_model, cfg.norm),
+        "attn": attn.attention_params(ks[1], cfg, dtype),
+        "ln2": norm_params(ks[2], cfg.d_model, cfg.norm),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.moe_params(ks[3], cfg, dtype)
+    else:
+        p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    k_emb, k_layers, k_final, k_head = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.vmap(lambda k: layer_params(k, cfg, dtype))(layer_keys)
+    params: Params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": norm_params(k_final, cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab, dtype)
+    return params
+
+
+def _block(cfg: ModelConfig, kernel_mode: str, x: jnp.ndarray, lp: Params):
+    from repro.distributed.sharding import constrain_btd
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    # Constrain the RAW block outputs (pre-residual): forces the row-sharded
+    # matmul psum to materialise in bf16 instead of being deferred into the
+    # f32 LayerNorm fusion (perf iteration 2, EXPERIMENTS.md §Perf).
+    o = constrain_btd(attn.attention_forward(lp["attn"], h, cfg, causal=True, kernel_mode=kernel_mode))
+    x = constrain_btd(x + o)
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, aux = moe_lib.moe_forward(lp["moe"], h, cfg)
+    else:
+        y, aux = mlp_forward(lp["mlp"], h, cfg.activation), jnp.float32(0.0)
+    return constrain_btd(x + constrain_btd(y)), aux
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def backbone(
+    params: Params,
+    x: jnp.ndarray,  # [B, T, D] (token or stub-frontend embeddings)
+    cfg: ModelConfig,
+    *,
+    kernel_mode: str = "auto",
+    remat: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan the layer stack; returns (hidden [B,T,D], summed aux loss)."""
+    block = functools.partial(_block, cfg, kernel_mode)
+    if remat:
+        block = jax.checkpoint(block)
+    x, auxs = jax.lax.scan(lambda c, lp: block(c, lp), x, params["layers"])
+    return x, auxs.sum()
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["lm_head"]
+
+
+def forward(
+    params: Params,
+    tokens: jnp.ndarray,  # [B, T] int32
+    cfg: ModelConfig,
+    *,
+    kernel_mode: str = "auto",
+    remat: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B, T, V], aux loss)."""
+    x = embed_tokens(params, cfg, tokens)
+    x, aux = backbone(params, x, cfg, kernel_mode=kernel_mode, remat=remat)
+    return unembed(params, cfg, x), aux
+
+
+def head_matrix(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward_hidden(
+    params: Params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    kernel_mode: str = "auto",
+    remat: bool = True,
+):
+    """(final normed hidden [B,T,D], unembedding matrix [D,V], aux) — the
+    vocab-safe path: the caller computes the loss with chunked CE instead of
+    materialising [B, T, V] logits."""
+    x = embed_tokens(params, cfg, tokens)
+    x, aux = backbone(params, x, cfg, kernel_mode=kernel_mode, remat=remat)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, head_matrix(params, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + paged-layout KV emission.
+# ---------------------------------------------------------------------------
+
+def prefill_with_kv(
+    params: Params,
+    tokens: jnp.ndarray,  # [B, T]
+    cfg: ModelConfig,
+    *,
+    kernel_mode: str = "auto",
+):
+    """Prefill producing last-position logits and per-layer KV in page layout
+    [L, B, n_pages, page, Hkv, hd] — scattered into SPARTA pools by the
+    serving engine according to the block tables."""
+    B, T = tokens.shape
+    page = cfg.kv_page_size
+    n_pages = -(-T // page)
+    pad = n_pages * page - T
+    x = embed_tokens(params, cfg, tokens)
+    positions = jnp.arange(T)[None, :]
+
+    def block(x, lp):
+        h = apply_norm(lp["ln1"], x, cfg.norm)
+        q, k, v = attn._project_qkv(lp["attn"], h, cfg, positions)
+        from repro.kernels.flash_attention import flash_attention
+        o = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=True, kernel_mode=kernel_mode,
+        ).transpose(0, 2, 1, 3).reshape(B, T, cfg.q_dim)
+        x = x + o @ lp["attn"]["wo"]
+        h = apply_norm(lp["ln2"], x, cfg.norm)
+        if cfg.moe is not None:
+            y, _ = moe_lib.moe_forward(lp["moe"], h, cfg)
+        else:
+            y = mlp_forward(lp["mlp"], h, cfg.activation)
+        kv = jnp.stack([k, v])  # [2, B, T, Hkv, hd]
+        if pad:
+            kv = jnp.pad(kv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        kv = kv.reshape(2, B, n_pages, page, cfg.num_kv_heads, cfg.head_dim)
+        return x + y, kv
+
+    x, kvs = jax.lax.scan(lambda c, lp: block(c, lp), x, params["layers"])
+    logits = unembed(params, cfg, x[:, -1:, :])
+    return logits, kvs[:, 0], kvs[:, 1]  # [L, B, n_pages, page, Hkv, hd] x2
+
+
+# ---------------------------------------------------------------------------
+# Paged decode.
+# ---------------------------------------------------------------------------
+
+def local_ctx_from_global(
+    ctx: jnp.ndarray, partition: jnp.ndarray, num_partitions: int, page: int
+) -> jnp.ndarray:
+    """Valid token count within THIS partition's packed local pages.
+
+    Logical page l lives on partition l % P at local index l // P; local
+    pages are packed (all full except possibly the partition holding the
+    globally-last partial page), so the paged-attention kernel's contiguous
+    position masking applies verbatim with this local count.
+    """
+    n_pages = -(-ctx // page)  # ceil
+    n_here = jnp.where(
+        n_pages > partition, (n_pages - partition - 1) // num_partitions + 1, 0
+    )
+    last_owner = (n_pages - 1) % num_partitions
+    tail = ctx - (n_pages - 1) * page
+    return jnp.where(
+        (n_here > 0) & (last_owner == partition),
+        (n_here - 1) * page + tail,
+        n_here * page,
+    ).astype(jnp.int32)
+
+
+def decode_block(
+    lp: Params,
+    x: jnp.ndarray,            # [B, 1, D]
+    cfg: ModelConfig,
+    k_pool: jnp.ndarray,       # [slots, page, Hkv, hd] this partition's pool
+    v_pool: jnp.ndarray,
+    table: jnp.ndarray,        # [B, pages_local]
+    ctx_len: jnp.ndarray,      # [B] GLOBAL context length incl. new token
+    *,
+    axis_name: Optional[str] = None,
+    kernel_mode: str = "auto",
+    skip_mlp: bool = False,
+):
+    """One transformer layer of paged decode.  With ``axis_name``, pools are
+    sequence-sharded over that mesh axis (SPARTA partitions) and partials
+    merge with one all-gather of (acc, m, l).  ``skip_mlp`` returns after the
+    attention residual (used by enc-dec decoders that splice cross-attention
+    between self-attention and the MLP)."""
+    page = cfg.kv_page_size
+    if axis_name is None:
+        me = jnp.int32(0)
+        P = 1
+    else:
+        me = jax.lax.axis_index(axis_name)
+        P = jax.lax.axis_size(axis_name)
+
+    h = apply_norm(lp["ln1"], x, cfg.norm)
+    q_all, k_all, v_all = attn._project_qkv(lp["attn"], h, cfg, (ctx_len - 1)[:, None])
+    k_new, v_new = k_all[:, 0], v_all[:, 0]              # [B, Hkv, hd]
+
+    # Attend over the pool as it stands BEFORE this token (hence ctx - 1).
+    from repro.kernels.paged_attention import paged_attention_partial
+    local_ctx = local_ctx_from_global(ctx_len - 1, me, P, page)
+    acc, m, l = paged_attention_partial(
+        q_all[:, 0], k_pool, v_pool, table, local_ctx, kernel_mode=kernel_mode,
+    )
+
+    # Write the new token's KV into the owning partition's pool.
+    cur_page = (ctx_len - 1) // page                     # [B] global logical page
+    owner = cur_page % P
+    local_page = cur_page // P
+    slot = jnp.take_along_axis(table, local_page[:, None], axis=1)[:, 0]
+    off = (ctx_len - 1) % page
+    mine = owner == me
+    safe_slot = jnp.where(mine & (slot >= 0), slot, 0)
+    k_cur = k_pool[safe_slot, off]                       # [B, Hkv, hd]
+    v_cur = v_pool[safe_slot, off]
+    k_wr = jnp.where(mine[:, None, None], k_new.astype(k_pool.dtype), k_cur)
+    v_wr = jnp.where(mine[:, None, None], v_new.astype(v_pool.dtype), v_cur)
+    k_pool = k_pool.at[safe_slot, off].set(k_wr)
+    v_pool = v_pool.at[safe_slot, off].set(v_wr)
+
+    # The freshly-written token must contribute to attention even though the
+    # kernel read the pool before the write: fold it in as one extra partial
+    # (the "hot tail" — the accelerator-side tiny TLB analogue: the newest
+    # entry rides with the request, no partition lookup needed).
+    hd, Hq, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    G = Hq // Hkv
+    q1 = q_all[:, 0].reshape(-1, Hkv, G, hd).astype(jnp.float32)
+    kt = k_new.astype(jnp.float32)
+    s_tail = jnp.einsum("bhgd,bhd->bhg", q1, kt) / (hd ** 0.5)
+    tail_m = s_tail.reshape(-1, Hq)
+    tail_l = jnp.ones_like(tail_m)
+    tail_acc = jnp.repeat(v_new.astype(jnp.float32), G, axis=1) # [B, Hq, hd]
+    # Only ONE partition (the owner… but every partition computed the same
+    # tail from replicated activations) should count it: weight by 1/P is
+    # wrong for max-merge, so mask to the owner partition.
+    big_neg = jnp.float32(-1e30)
+    tail_m = jnp.where(mine[:, None], tail_m, big_neg)
+    tail_l = jnp.where(mine[:, None], tail_l, 0.0)
+    tail_acc = jnp.where(mine[:, None, None], tail_acc, 0.0)
+
+    accs = jnp.stack([acc, tail_acc])
+    ms = jnp.stack([m, tail_m])
+    ls = jnp.stack([l, tail_l])
+    if axis_name is not None:
+        accs = jax.lax.all_gather(accs, axis_name).reshape(-1, *acc.shape)
+        ms = jax.lax.all_gather(ms, axis_name).reshape(-1, *m.shape)
+        ls = jax.lax.all_gather(ls, axis_name).reshape(-1, *l.shape)
+    merged = merge_partials(accs, ms, ls)                # [B, Hq, hd]
+    x = x + attn.finish_decode_attention(lp["attn"], merged, cfg)
+
+    if skip_mlp:
+        return x, k_pool, v_pool
+    h = apply_norm(lp["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, _ = moe_lib.moe_forward(lp["moe"], h, cfg)
+    else:
+        y = mlp_forward(lp["mlp"], h, cfg.activation)
+    return x + y, k_pool, v_pool
+
+
+def decode_step(
+    params: Params,
+    tokens: jnp.ndarray,       # [B] int32 newest token ids
+    cfg: ModelConfig,
+    k_pools: jnp.ndarray,      # [L, slots, page, Hkv, hd]
+    v_pools: jnp.ndarray,
+    table: jnp.ndarray,        # [B, pages_local]
+    ctx_len: jnp.ndarray,      # [B] global ctx incl. the new token
+    *,
+    axis_name: Optional[str] = None,
+    kernel_mode: str = "auto",
+):
+    """Single-token decode over the full layer stack (scan); returns
+    (logits [B, V], updated pools)."""
+    x = embed_tokens(params, cfg, tokens[:, None])
+
+    def body(x, scanned):
+        lp, kp, vp = scanned
+        x, kp, vp = decode_block(
+            lp, x, cfg, kp, vp, table, ctx_len,
+            axis_name=axis_name, kernel_mode=kernel_mode,
+        )
+        return x, (kp, vp)
+
+    x, (k_pools, v_pools) = jax.lax.scan(body, x, (params["layers"], k_pools, v_pools))
+    logits = unembed(params, cfg, x)[:, 0]
+    return logits, k_pools, v_pools

@@ -1,0 +1,54 @@
+"""InternVL2-style VLM: stub ViT frontend + dense GQA LM backbone.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings [B, num_image_tokens, D] (the InternViT
++ MLP-projector output).  The LM backbone is the unified transformer; image
+tokens are prepended to the text embeddings and the loss masks them out.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import Params, cross_entropy
+
+
+init = tfm.init  # backbone params only; the frontend is a stub
+
+
+def forward(params: Params, batch, cfg: ModelConfig, *, kernel_mode: str = "auto",
+            remat: bool = True):
+    """batch: {patch_embeds [B, I, D], tokens [B, T_text]} -> (logits over the
+    text positions [B, T_text, V], aux)."""
+    patch = batch["patch_embeds"]
+    tokens = batch["tokens"]
+    x_text = tfm.embed_tokens(params, cfg, tokens)
+    x = jnp.concatenate([patch.astype(x_text.dtype), x_text], axis=1)
+    x, aux = tfm.backbone(params, x, cfg, kernel_mode=kernel_mode, remat=remat)
+    logits = tfm.unembed(params, cfg, x[:, patch.shape[1]:])
+    return logits, aux
+
+
+def loss_fn(params: Params, batch, cfg: ModelConfig, **kw) -> jnp.ndarray:
+    logits, aux = forward(params, batch, cfg, **kw)
+    return cross_entropy(logits[:, :-1], batch["tokens"][:, 1:]) + aux
+
+
+# Decode: identical to the dense transformer (the image prefix was written to
+# the paged pools at prefill; ctx_len counts image + text tokens).
+decode_step = tfm.decode_step
+
+
+def forward_hidden(params: Params, batch, cfg: ModelConfig, *,
+                   kernel_mode: str = "auto", remat: bool = True):
+    patch = batch["patch_embeds"]
+    x_text = tfm.embed_tokens(params, cfg, batch["tokens"])
+    x = jnp.concatenate([patch.astype(x_text.dtype), x_text], axis=1)
+    x, aux = tfm.backbone(params, x, cfg, kernel_mode=kernel_mode, remat=remat)
+    from repro.models.layers import apply_norm
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x[:, patch.shape[1]:], tfm.head_matrix(params, cfg), aux

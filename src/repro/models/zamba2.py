@@ -1,0 +1,143 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block.
+
+The assigned config (81 layers) is realised as ``hybrid_period``-sized groups
+of Mamba2 blocks with the shared attention+MLP block applied after each group
+(weights shared across all applications, as in Zamba2; we omit the
+per-invocation LoRA deltas — noted in DESIGN.md).  With period 3 that is
+81 Mamba2 layers and 27 shared-attention applications.
+
+Serving: the Mamba2 state is O(1), while each shared-attention application
+keeps a KV cache — THE SPARTA-paged, sequence-sharded cache.  This is the
+hybrid arch that exercises long_500k *with* the paper's technique.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import merge_partials
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    Params, apply_norm, dense_init, dtype_of, embed_init, mlp_forward,
+    mlp_params, norm_params,
+)
+
+
+def group_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    period = max(cfg.hybrid_period, 1)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    return cfg.num_layers // period, period  # (groups, mamba per group)
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    dtype = dtype_of(cfg.dtype)
+    G, per = group_dims(cfg)
+    k_emb, k_m, k_a, k_mlp, k_n1, k_n2, k_fin, k_head = jax.random.split(key, 8)
+    mamba_keys = jax.random.split(k_m, G * per).reshape(G, per, -1)
+    return {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "mamba": jax.vmap(jax.vmap(lambda k: mamba2.block_params(k, cfg, dtype)))(mamba_keys),
+        "shared_attn": {
+            "ln1": norm_params(k_n1, cfg.d_model, cfg.norm),
+            "attn": attn.attention_params(k_a, cfg, dtype),
+            "ln2": norm_params(k_n2, cfg.d_model, cfg.norm),
+            "mlp": mlp_params(k_mlp, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+        },
+        "final_norm": norm_params(k_fin, cfg.d_model, cfg.norm),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _shared_attn_forward(sp: Params, x: jnp.ndarray, cfg: ModelConfig, kernel_mode: str):
+    h = apply_norm(sp["ln1"], x, cfg.norm)
+    x = x + attn.attention_forward(sp["attn"], h, cfg, causal=True, kernel_mode=kernel_mode)
+    h = apply_norm(sp["ln2"], x, cfg.norm)
+    return x + mlp_forward(sp["mlp"], h, cfg.activation)
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            kernel_mode: str = "auto", remat: bool = True):
+    x = params["embed"][tokens]
+    G, per = group_dims(cfg)
+
+    def group(x, gp):
+        def m_block(x, mp):
+            y, _ = mamba2.block_forward(mp, x, cfg, kernel_mode=kernel_mode)
+            return y, None
+        x, _ = jax.lax.scan(m_block, x, gp)
+        x = _shared_attn_forward(params["shared_attn"], x, cfg, kernel_mode)
+        return x, None
+
+    grp = jax.checkpoint(group) if remat else group
+    x, _ = jax.lax.scan(lambda c, gp: grp(c, gp), x, params["mamba"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x @ params["lm_head"], jnp.float32(0.0)
+
+
+def forward_hidden(params: Params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                   kernel_mode: str = "auto", remat: bool = True):
+    x = params["embed"][tokens]
+    G, per = group_dims(cfg)
+
+    def group(x, gp):
+        def m_block(x, mp):
+            y, _ = mamba2.block_forward(mp, x, cfg, kernel_mode=kernel_mode)
+            return y, None
+        x, _ = jax.lax.scan(m_block, x, gp)
+        x = _shared_attn_forward(params["shared_attn"], x, cfg, kernel_mode)
+        return x, None
+
+    grp = jax.checkpoint(group) if remat else group
+    x, _ = jax.lax.scan(lambda c, gp: grp(c, gp), x, params["mamba"])
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, params["lm_head"], jnp.float32(0.0)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    G, per = group_dims(cfg)
+    one = mamba2.init_block_state(cfg, batch)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (G, per) + a.shape), one)
+
+
+def decode_step(
+    params: Params,
+    tokens: jnp.ndarray,       # [B]
+    cfg: ModelConfig,
+    mamba_state,               # pytree with leading [G, per]
+    k_pools: jnp.ndarray,      # [G, slots, page, Hkv, hd] — shared-attn caches
+    v_pools: jnp.ndarray,
+    table: jnp.ndarray,        # [B, pages_local]
+    ctx_len: jnp.ndarray,      # [B]
+    *,
+    axis_name=None,
+    kernel_mode: str = "auto",
+):
+    """One token: G x (per Mamba2 steps + one paged shared-attention)."""
+    x = params["embed"][tokens][:, None, :]
+    sp = params["shared_attn"]
+
+    def group(x, scanned):
+        gp, gstate, kp, vp = scanned
+
+        def m_block(x, mpst):
+            mp, st = mpst
+            y, new_st = mamba2.block_forward(mp, x, cfg, kernel_mode=kernel_mode, state=st)
+            return y, new_st
+        x, new_gstate = jax.lax.scan(m_block, x, (gp, gstate))
+        lp = {"ln1": sp["ln1"], "attn": sp["attn"], "ln2": sp["ln2"], "mlp": sp["mlp"]}
+        x, kp, vp = tfm.decode_block(
+            lp, x, cfg, kp, vp, table, ctx_len, axis_name=axis_name, kernel_mode=kernel_mode,
+        )
+        return x, (new_gstate, kp, vp)
+
+    x, (mamba_state, k_pools, v_pools) = jax.lax.scan(
+        group, x, (params["mamba"], mamba_state, k_pools, v_pools)
+    )
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = (x @ params["lm_head"])[:, 0]
+    return logits, mamba_state, k_pools, v_pools

@@ -1,0 +1,62 @@
+"""Elastic scaling: restart a job on a different device count.
+
+Checkpoints are mesh-agnostic (numpy + manifest), so elasticity is a policy
+question: pick a new mesh factorisation for the surviving devices, rebuild
+the PartitionSpecs, and ``restore_resharded``.  The model axis is kept fixed
+(TP degree is baked into kernel-efficiency choices); the data (and pod) axes
+absorb the change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_devices: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def plan_remesh(available_devices: int, *, model_axis: int = 16,
+                pod_size: Optional[int] = None) -> RemeshPlan:
+    """Largest (data, model) mesh fitting the surviving devices.
+
+    E.g. 256 chips with 3 dead -> 253 available -> 15x16 = 240 used,
+    13 idle spares (kept warm as replacements)."""
+    if available_devices < model_axis:
+        raise ValueError(f"need >= {model_axis} devices, have {available_devices}")
+    data = available_devices // model_axis
+    used = data * model_axis
+    return RemeshPlan(shape=(data, model_axis), axes=("data", "model"),
+                      dropped_devices=available_devices - used)
+
+
+def elastic_restore(ckpt_root, cfg: ModelConfig, plan: RemeshPlan, template,
+                    *, step: Optional[int] = None):
+    """Rebuild (params, opt_state) on the new mesh. Returns
+    (state, step, mesh)."""
+    from repro.checkpoint.checkpoint import restore_resharded
+
+    mesh = make_mesh(plan.shape, plan.axes)
+    multi_pod = "pod" in plan.axes
+    pspecs = shd.param_specs(template["params"], cfg, mode="train", multi_pod=multi_pod)
+    ospecs = shd.opt_state_specs(template["params"], cfg, multi_pod=multi_pod)
+    tree, step = restore_resharded(
+        ckpt_root, template, mesh, {"params": pspecs, "opt_state": ospecs}, step=step,
+    )
+    return tree, step, mesh

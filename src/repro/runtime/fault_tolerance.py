@@ -1,0 +1,132 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, step retry,
+preemption-aware training loop.
+
+Designed for the 1000+-node regime: per-host step-time EWMAs feed a
+straggler report; because the data pipeline is stateless-deterministic
+(repro.data.pipeline) a flagged host can be evicted and its shard
+reassigned without replaying any loader state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class HostStats:
+    ewma: float = 0.0
+    count: int = 0
+    last_seen: float = 0.0
+
+
+class HeartbeatTracker:
+    """Tracks per-host step durations; flags stragglers and dead hosts."""
+
+    def __init__(self, *, alpha: float = 0.2, straggler_factor: float = 1.5,
+                 dead_after_s: float = 60.0):
+        self.alpha = alpha
+        self.straggler_factor = straggler_factor
+        self.dead_after_s = dead_after_s
+        self.hosts: Dict[int, HostStats] = {}
+
+    def record(self, host: int, step_time_s: float, now: Optional[float] = None):
+        st = self.hosts.setdefault(host, HostStats())
+        st.ewma = step_time_s if st.count == 0 else (
+            self.alpha * step_time_s + (1 - self.alpha) * st.ewma
+        )
+        st.count += 1
+        st.last_seen = time.time() if now is None else now
+
+    def _median_ewma(self) -> float:
+        vals = sorted(s.ewma for s in self.hosts.values() if s.count > 0)
+        return vals[len(vals) // 2] if vals else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self._median_ewma()
+        if med <= 0:
+            return []
+        return [h for h, s in self.hosts.items() if s.ewma > self.straggler_factor * med]
+
+    def dead(self, now: Optional[float] = None) -> List[int]:
+        t = time.time() if now is None else now
+        return [h for h, s in self.hosts.items() if t - s.last_seen > self.dead_after_s]
+
+
+class PreemptionHandler:
+    """SIGTERM => checkpoint-and-exit at the next step boundary."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._on_signal)
+            except ValueError:
+                pass  # not main thread (tests)
+
+    def _on_signal(self, *_):
+        self.requested = True
+
+
+def retry_step(fn: Callable, *args, retries: int = 2,
+               on_retry: Optional[Callable[[int, BaseException], None]] = None):
+    """Run one step with bounded retry (transient XLA/runtime faults)."""
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args)
+        except Exception as e:  # noqa: BLE001
+            if attempt == retries:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    checkpoint_every: int = 100
+    keep: int = 3
+    retries: int = 2
+
+
+def run_training_loop(
+    step_fn: Callable,
+    state: tuple,
+    batch_fn: Callable[[int], dict],
+    ckpt_root,
+    loop: LoopConfig,
+    *,
+    start_step: int = 0,
+    tracker: Optional[HeartbeatTracker] = None,
+    preemption: Optional[PreemptionHandler] = None,
+    host_id: int = 0,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+):
+    """The fault-tolerant driver: retries steps, heartbeats, periodic async
+    checkpoints, checkpoint-and-exit on preemption.  Returns (state, step)."""
+    from repro.checkpoint.checkpoint import AsyncCheckpointer
+
+    tracker = tracker or HeartbeatTracker()
+    ckpt = AsyncCheckpointer(ckpt_root, keep=loop.keep)
+    step = start_step
+    try:
+        while step < loop.total_steps:
+            t0 = time.time()
+            batch = batch_fn(step)
+            params, opt_state, metrics = retry_step(
+                step_fn, *state, batch, retries=loop.retries
+            )
+            state = (params, opt_state)
+            tracker.record(host_id, time.time() - t0)
+            if on_metrics:
+                on_metrics(step, metrics)
+            step += 1
+            if step % loop.checkpoint_every == 0:
+                ckpt.submit(step, {"params": params, "opt_state": opt_state})
+            if preemption is not None and preemption.requested:
+                ckpt.submit(step, {"params": params, "opt_state": opt_state})
+                break
+    finally:
+        ckpt.close()
+    return state, step

@@ -1,0 +1,133 @@
+"""serve_step builders: one-token decode per architecture family.
+
+Every builder returns ``step(params, inputs) -> (logits, new_state)`` where
+``inputs`` matches ``repro.configs.registry.input_specs`` for the decode
+shapes.  KV state uses the global-view SPARTA layout (partition axis
+explicit, sharded onto the mesh ``model`` axis — or data x model for the
+single-sequence long-context shape).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv6 as rwkv6_m
+from repro.models import mamba2
+from repro.models import transformer as tfm
+from repro.models.layers import apply_norm, mlp_forward
+from repro.models.paged_global import decode_block_global
+
+
+def _dense_serve(cfg: ModelConfig, kernel_mode: str):
+    def step(params, inputs):
+        tokens, ctx = inputs["tokens"], inputs["ctx_len"]
+        x = tfm.embed_tokens(params, cfg, tokens[:, None])
+
+        def body(x, scanned):
+            lp, kp, vp = scanned
+            x, kp, vp = decode_block_global(
+                lp, x, cfg, kp, vp, inputs["tables"], ctx,
+            )
+            return x, (kp, vp)
+
+        x, (k_pools, v_pools) = jax.lax.scan(
+            body, x, (params["layers"], inputs["k_pools"], inputs["v_pools"])
+        )
+        logits = tfm.unembed(params, cfg, x)[:, 0]
+        return logits, {"k_pools": k_pools, "v_pools": v_pools}
+    return step
+
+
+def _hybrid_serve(cfg: ModelConfig, kernel_mode: str):
+    def step(params, inputs):
+        tokens, ctx = inputs["tokens"], inputs["ctx_len"]
+        x = params["embed"][tokens][:, None, :]
+        sp = params["shared_attn"]
+
+        def group(x, scanned):
+            gp, conv_s, ssm_s, kp, vp = scanned
+
+            def m_block(x, mpst):
+                mp, cs, ss = mpst
+                y, new = mamba2.block_forward(
+                    mp, x, cfg, kernel_mode=kernel_mode, state={"conv": cs, "ssm": ss}
+                )
+                return y, (new["conv"], new["ssm"])
+            x, (conv_s, ssm_s) = jax.lax.scan(m_block, x, (gp, conv_s, ssm_s))
+            lp = {"ln1": sp["ln1"], "attn": sp["attn"], "ln2": sp["ln2"], "mlp": sp["mlp"]}
+            x, kp, vp = decode_block_global(lp, x, cfg, kp, vp, inputs["tables"], ctx)
+            return x, (conv_s, ssm_s, kp, vp)
+
+        x, (conv_s, ssm_s, k_pools, v_pools) = jax.lax.scan(
+            group, x,
+            (params["mamba"], inputs["conv_state"], inputs["ssm_state"],
+             inputs["k_pools"], inputs["v_pools"]),
+        )
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        logits = (x @ params["lm_head"])[:, 0]
+        return logits, {
+            "conv_state": conv_s, "ssm_state": ssm_s,
+            "k_pools": k_pools, "v_pools": v_pools,
+        }
+    return step
+
+
+def _ssm_serve(cfg: ModelConfig, kernel_mode: str):
+    def step(params, inputs):
+        state = {k: inputs[k] for k in ("tm_shift", "cm_shift", "wkv")}
+        logits, new_state = rwkv6_m.decode_step(
+            params, inputs["tokens"], cfg, state, kernel_mode=kernel_mode
+        )
+        return logits, new_state
+    return step
+
+
+def _encdec_serve(cfg: ModelConfig, kernel_mode: str):
+    from repro.kernels.flash_attention import flash_attention
+
+    def step(params, inputs):
+        tokens, ctx = inputs["tokens"], inputs["ctx_len"]
+        B = tokens.shape[0]
+        x = params["embed"][tokens][:, None, :] + params["dec_pos"][ctx - 1][:, None, :]
+
+        def body(x, scanned):
+            lp, kp, vp, ck, cv = scanned
+            x, kp, vp = decode_block_global(
+                {"ln1": lp["ln1"], "attn": lp["self_attn"]},
+                x, cfg, kp, vp, inputs["tables"], ctx, skip_mlp=True,
+            )
+            h = apply_norm(lp["ln_x"], x, cfg.norm)
+            q = (h @ lp["cross_attn"]["wq"]).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+            o = flash_attention(
+                q.transpose(0, 2, 1, 3), ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                causal=False, kernel_mode=kernel_mode,
+            ).transpose(0, 2, 1, 3).reshape(B, 1, cfg.q_dim)
+            x = x + o @ lp["cross_attn"]["wo"]
+            h = apply_norm(lp["ln2"], x, cfg.norm)
+            x = x + mlp_forward(lp["mlp"], h, cfg.activation)
+            return x, (kp, vp)
+
+        x, (k_pools, v_pools) = jax.lax.scan(
+            body, x,
+            (params["dec_layers"], inputs["k_pools"], inputs["v_pools"],
+             inputs["cross_k"], inputs["cross_v"]),
+        )
+        x = apply_norm(params["dec_norm"], x, cfg.norm)
+        logits = (x @ params["embed"].T)[:, 0]
+        return logits, {"k_pools": k_pools, "v_pools": v_pools}
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, *, kernel_mode: str = "reference") -> Callable:
+    """Returns step(params, inputs)->(logits, new_state) for decode shapes."""
+    return {
+        "dense": _dense_serve,
+        "moe": _dense_serve,
+        "vlm": _dense_serve,
+        "hybrid": _hybrid_serve,
+        "ssm": _ssm_serve,
+        "encdec": _encdec_serve,
+    }[cfg.family](cfg, kernel_mode)

@@ -1,0 +1,73 @@
+"""train_step / prefill_step builders (family-agnostic)."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro import models
+from repro.train.optimizer import OptimizerConfig, apply_updates
+
+
+def make_loss_fn(cfg: ModelConfig, *, kernel_mode: str = "reference", remat: bool = True):
+    def loss_fn(params, batch):
+        return models.loss_fn(params, batch, cfg, kernel_mode=kernel_mode, remat=remat)
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: OptimizerConfig = OptimizerConfig(),
+    *,
+    kernel_mode: str = "reference",
+    remat: bool = True,
+    microbatches: int = 1,
+    compress_grads: Callable | None = None,
+) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches`` > 1 accumulates gradients over the leading batch split
+    (sequential scan — overlaps with the reduce via XLA scheduling).
+    ``compress_grads`` optionally transforms the gradient pytree before the
+    optimizer (e.g. top-k + error feedback across pods)."""
+    loss_fn = make_loss_fn(cfg, kernel_mode=kernel_mode, remat=remat)
+    vg = jax.value_and_grad(loss_fn)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = vg(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb_i):
+                loss_acc, g_acc = carry
+                loss_i, g_i = vg(params, mb_i)
+                return (loss_acc + loss_i, jax.tree.map(jnp.add, g_acc, g_i)), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.float32(0.0), zeros), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        if compress_grads is not None:
+            grads = compress_grads(grads)
+        params, opt_state, om = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, kernel_mode: str = "reference") -> Callable:
+    """Inference prefill: logits for the whole prompt (the 32k-prefill shape).
+
+    Dense/MoE/VLM/enc-dec run the training forward without loss/grad; the
+    serving engine variant that also emits page-layout KV lives in
+    ``repro.models.transformer.prefill_with_kv``."""
+    def step(params, batch):
+        logits, _ = models.forward(params, batch, cfg, kernel_mode=kernel_mode, remat=True)
+        return logits[:, -1]  # next-token logits
+    return step

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba2_scan import mamba2_scan
+from repro.kernels.paged_attention import merge_partials, paged_attention
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.tlb_sim import tlb_sim
+from repro.models.flash_ref import flash_attention_jnp
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,Tq,Tk,D,causal,dtype", [
+    (1, 4, 2, 64, 64, 32, True, jnp.float32),
+    (2, 8, 8, 96, 96, 64, True, jnp.float32),
+    (1, 4, 1, 33, 80, 64, False, jnp.float32),
+    (2, 2, 2, 128, 128, 128, True, jnp.bfloat16),
+    (1, 4, 2, 1, 96, 32, True, jnp.float32),  # decode: single query
+])
+def test_flash_attention_vs_oracle(rng, B, Hq, Hkv, Tq, Tk, D, causal, dtype):
+    q = jnp.asarray(rng.standard_normal((B, Hq, Tq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Tk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Tk, D)), dtype)
+    ref = attention_ref(q, k, v, causal=causal)
+    pal = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                          kernel_mode="pallas_interpret")
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_ref_chunked_equals_naive(rng):
+    q = jnp.asarray(rng.standard_normal((2, 4, 50, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 70, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 70, 32)), jnp.float32)
+    for causal in (True, False):
+        a = flash_attention_jnp(q, k, v, causal=causal, block_k=16)
+        b = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,page,pages,slots", [
+    (2, 8, 2, 64, 16, 4, 32),
+    (3, 4, 4, 32, 8, 6, 64),
+    (1, 16, 8, 128, 32, 3, 16),
+])
+def test_paged_attention_vs_oracle(rng, B, Hq, Hkv, D, page, pages, slots):
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((slots, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((slots, page, Hkv, D)), jnp.float32)
+    tbl = np.full((B, pages), -1, np.int32)
+    ctx = np.zeros(B, np.int32)
+    for b in range(B):
+        n = int(rng.integers(1, pages + 1))
+        tbl[b, :n] = rng.choice(slots, n, replace=False)
+        ctx[b] = (n - 1) * page + int(rng.integers(1, page + 1))
+    tbl, ctx = jnp.asarray(tbl), jnp.asarray(ctx)
+    ref = paged_attention(q, kp, vp, tbl, ctx, kernel_mode="reference")
+    pal = paged_attention(q, kp, vp, tbl, ctx, kernel_mode="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=2e-5)
+
+
+def test_merge_partials_is_exact_partition_of_softmax(rng):
+    """Splitting the KV across partitions then merging == one-shot attention."""
+    from repro.kernels.paged_attention import paged_attention_partial
+    B, Hq, Hkv, D, page = 2, 4, 2, 32, 8
+    slots, pages = 16, 4
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((slots, page, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((slots, page, Hkv, D)), jnp.float32)
+    tbl = jnp.asarray(rng.choice(slots, (B, pages), replace=False).astype(np.int32))
+    ctx = jnp.asarray(np.full(B, pages * page, np.int32))
+    full = paged_attention(q, kp, vp, tbl, ctx, kernel_mode="reference")
+    # Partition pages across 2 "devices": mask halves of the table.
+    parts = []
+    for half in range(2):
+        t = np.asarray(tbl).copy()
+        t[:, half::2] = -1  # this partition owns the other pages... keep ctx
+        acc, m, l = paged_attention_partial(q, kp, vp, jnp.asarray(t), ctx,
+                                            kernel_mode="reference")
+        parts.append((acc, m, l))
+    merged = merge_partials(
+        jnp.stack([p[0] for p in parts]),
+        jnp.stack([p[1] for p in parts]),
+        jnp.stack([p[2] for p in parts]),
+    )
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full), atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,T,N,chunk", [(2, 2, 64, 32, 32), (1, 4, 96, 16, 16)])
+def test_rwkv6_chunked_vs_exact(rng, B, H, T, N, chunk):
+    r = jnp.asarray(rng.standard_normal((B, H, T, N)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, T, N)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, T, N)) * 0.5, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.75, 0.999, (B, H, T, N)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, N)) * 0.5, jnp.float32)
+    o_ref, s_ref = rwkv6_scan(r, k, v, w, u, kernel_mode="reference")
+    o_pal, s_pal = rwkv6_scan(r, k, v, w, u, chunk=chunk, kernel_mode="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref), atol=5e-4)
+
+
+@pytest.mark.parametrize("B,H,T,P,N,chunk", [(2, 2, 64, 32, 16, 32), (1, 4, 96, 16, 32, 16)])
+def test_mamba2_chunked_vs_exact(rng, B, H, T, P, N, chunk):
+    x = jnp.asarray(rng.standard_normal((B, H, T, P)) * 0.5, jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, H, T)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 4.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, T, N)) * 0.5, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((B, T, N)) * 0.5, jnp.float32)
+    D = jnp.asarray(rng.standard_normal((H,)), jnp.float32)
+    y_ref, s_ref = mamba2_scan(x, dt, A, Bm, C, D, kernel_mode="reference")
+    y_pal, s_pal = mamba2_scan(x, dt, A, Bm, C, D, chunk=chunk, kernel_mode="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref), atol=5e-4)
+
+
+@pytest.mark.parametrize("TS,W,N,blk", [(16, 4, 1024, 256), (64, 4, 2048, 512), (8, 2, 512, 128)])
+def test_tlb_sim_kernel_bit_exact(rng, TS, W, N, blk):
+    s = jnp.asarray(rng.integers(0, TS, N), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 50, N), jnp.int32)
+    ref = tlb_sim(s, t, TS, W, kernel_mode="reference")
+    pal = tlb_sim(s, t, TS, W, block=blk, kernel_mode="pallas_interpret")
+    assert (np.asarray(ref) == np.asarray(pal)).all()

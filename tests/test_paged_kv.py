@@ -1,0 +1,114 @@
+"""Hypothesis property tests for the SPARTA paged-KV manager (paper §5
+transplanted to serving: demand allocation, CoW, partition invariant)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.paged_kv import FREE, PagedKVConfig, SpartaKVManager, partition_of
+
+
+@st.composite
+def op_sequences(draw):
+    n_ops = draw(st.integers(1, 40))
+    return [draw(st.sampled_from(["new", "append", "fork", "free"])) for _ in range(n_ops)], draw(st.randoms())
+
+
+@settings(deadline=None, max_examples=60)
+@given(op_sequences())
+def test_manager_invariants_hold_under_any_op_sequence(ops_rng):
+    ops, rnd = ops_rng
+    cfg = PagedKVConfig(num_partitions=4, slots_per_partition=64, page_size=8)
+    m = SpartaKVManager(cfg)
+    live = []
+    for op in ops:
+        try:
+            if op == "new" or not live:
+                live.append(m.new_sequence())
+            elif op == "append":
+                m.append_tokens(rnd.choice(live), rnd.randint(1, 30))
+            elif op == "fork":
+                live.append(m.fork(rnd.choice(live)))
+            elif op == "free":
+                sid = rnd.choice(live)
+                live.remove(sid)
+                m.free_sequence(sid)
+        except MemoryError:
+            pass  # pool exhaustion is a legal outcome, not an invariant break
+        m.check_invariants()
+
+
+def test_partition_hash_invariant():
+    """Logical page l lives on partition l % P — always."""
+    cfg = PagedKVConfig(num_partitions=4, slots_per_partition=32, page_size=4)
+    m = SpartaKVManager(cfg)
+    s = m.new_sequence()
+    m.append_tokens(s, 40)  # 10 pages
+    tables = m.local_block_tables([s], max_pages=10)
+    for lp in range(10):
+        p = partition_of(lp, 4)
+        assert tables[p, 0, lp // 4] >= 0
+        # all other partitions have no entry for this local index... (packed)
+
+
+def test_cow_preserves_partition_and_parent():
+    cfg = PagedKVConfig(num_partitions=2, slots_per_partition=16, page_size=4)
+    m = SpartaKVManager(cfg)
+    a = m.new_sequence()
+    m.append_tokens(a, 6)              # page 1 is partial (2/4 tokens)
+    b = m.fork(a)
+    parent_pages = m.seq_pages(a)
+    written = m.append_tokens(b, 1)    # CoW on the shared tail page
+    assert m.seq_pages(a) == parent_pages          # parent untouched
+    assert m.seq_pages(b)[0] == parent_pages[0]    # full page still shared
+    assert m.seq_pages(b)[1] != parent_pages[1]    # tail copied
+    # copy stayed in the same partition (hash depends on logical index only)
+    lp = 1
+    assert partition_of(lp, 2) == partition_of(lp, 2)
+    m.check_invariants()
+
+
+def test_demand_allocation_is_lazy():
+    cfg = PagedKVConfig(num_partitions=4, slots_per_partition=8, page_size=16)
+    m = SpartaKVManager(cfg)
+    s = m.new_sequence()
+    free_before = [m.num_free(p) for p in range(4)]
+    m.append_tokens(s, 1)  # only page 0 allocated
+    assert m.num_free(0) == free_before[0] - 1
+    assert all(m.num_free(p) == free_before[p] for p in range(1, 4))
+
+
+def test_fork_shares_without_copying():
+    cfg = PagedKVConfig(num_partitions=2, slots_per_partition=8, page_size=4)
+    m = SpartaKVManager(cfg)
+    a = m.new_sequence()
+    m.append_tokens(a, 8)
+    free0 = m.num_free(0) + m.num_free(1)
+    b = m.fork(a)
+    assert m.num_free(0) + m.num_free(1) == free0  # zero new pages
+    assert m.seq_pages(a) == m.seq_pages(b)
+    m.free_sequence(a)
+    m.check_invariants()  # b keeps the pages alive
+    assert m.seq_pages(b)
+
+
+def test_exhaustion_raises_memoryerror():
+    cfg = PagedKVConfig(num_partitions=1, slots_per_partition=2, page_size=4)
+    m = SpartaKVManager(cfg)
+    s = m.new_sequence()
+    with pytest.raises(MemoryError):
+        m.append_tokens(s, 100)
+
+
+def test_global_vs_local_tables_agree():
+    cfg = PagedKVConfig(num_partitions=4, slots_per_partition=16, page_size=4)
+    m = SpartaKVManager(cfg)
+    s = m.new_sequence()
+    m.append_tokens(s, 30)
+    loc = m.local_block_tables([s], 8)
+    glob = m.global_block_table([s], 8)
+    for lp in range(8):
+        p = partition_of(lp, 4)
+        if glob[0, lp] == FREE:
+            assert loc[p, 0, lp // 4] == FREE
+        else:
+            assert glob[0, lp] == p * cfg.slots_per_partition + loc[p, 0, lp // 4]
