@@ -14,7 +14,8 @@ import numpy as np
 from benchmarks.common import Claim, W4, print_csv, save_fig, trace
 from repro.core import cpi
 from repro.core.sparta import SystemLatencies, TLBConfig
-from repro.core.tlbsim import SystemSimConfig, simulate_system
+from repro.core.sweep import sweep_system
+from repro.core.tlbsim import SystemSimConfig
 
 CACHE = TLBConfig(entries=256, ways=4)      # 16 KB virtual cache
 ACCEL_TLB = TLBConfig(entries=128, ways=4)  # baseline accel-side TLB
@@ -32,7 +33,7 @@ CONFIGS = (  # (label, partitions, page_shift, design)
 )
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "auto"):
     n_ops = 8_000 if quick else 25_000
     lat = SystemLatencies(n_sockets=8)
     speedups = {c[0]: [] for c in CONFIGS}
@@ -42,16 +43,21 @@ def run(quick: bool = False):
     for w in W4:
         tr = trace(w, n_ops=n_ops)
         ipa = tr.instr_per_access
-        perfs = {}
-        for label, parts, shift, design in CONFIGS:
-            accel = ACCEL_TLB if design == "conventional" else None
-            ev = simulate_system(tr.lines, SystemSimConfig(
-                cache=CACHE, accel_tlb=accel, mem_tlb=MEM_TLB,
-                num_partitions=parts, page_shift=shift,
+        # All nine designs (4K/2M x partition counts x DIPTA/ideal) share one
+        # batched pass over the trace.
+        evs = sweep_system(tr.lines, [
+            SystemSimConfig(
+                cache=CACHE,
+                accel_tlb=ACCEL_TLB if design == "conventional" else None,
+                mem_tlb=MEM_TLB, num_partitions=parts, page_shift=shift,
                 accel_probe_on_miss_only=True,
-            ))
+            )
+            for _, parts, shift, design in CONFIGS
+        ], kernel_mode=kernel_mode)
+        perfs = {}
+        for i_c, (label, parts, shift, design) in enumerate(CONFIGS):
             perfs[label] = cpi.evaluate_design(
-                design, ev, lat, instr_per_access=ipa, workload=w,
+                design, evs[i_c], lat, instr_per_access=ipa, workload=w,
             )
         base = perfs["conv-4K"]
         row = [w]

@@ -9,7 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Claim, W4, print_csv, save_fig, trace
-from repro.core import tlbsim
+from repro.core.sparta import TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_tlb
 
 SIZES = (4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048)
 CONFIGS = (  # (label, partitions, page_shift)
@@ -30,17 +31,24 @@ def _match_size(sizes, curve, target_miss):
     return None
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "auto"):
     n_ops = 10_000 if quick else 40_000
     sizes = SIZES[:7] if quick else SIZES
     results = {}
     rows = []
     for w in W4:
         tr = trace(w, n_ops=n_ops)
-        for label, parts, shift in CONFIGS:
-            curve = tlbsim.miss_ratio_curve(
-                tr.lines, sizes, num_partitions=parts, page_shift=shift,
-            )
+        # Every (config, size) point rides one batched sweep: the trace is
+        # scanned ONCE per workload, not once per (config x size) pair.
+        specs = [
+            TLBSweepSpec(TLBConfig(entries=int(s), ways=4),
+                         num_partitions=parts, page_shift=shift)
+            for _, parts, shift in CONFIGS
+            for s in sizes
+        ]
+        mr = sweep_tlb(tr.lines, specs, kernel_mode=kernel_mode).miss_ratios
+        mr = mr.reshape(len(CONFIGS), len(sizes))
+        for (label, _, _), curve in zip(CONFIGS, mr):
             results[f"{w}/{label}"] = list(map(float, curve))
             rows.append([w, label] + list(map(float, curve)))
 

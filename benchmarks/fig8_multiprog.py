@@ -9,8 +9,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Claim, GIB, print_csv, save_fig
-from repro.core import tlbsim, traces
+from repro.core import traces
 from repro.core.sparta import TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_tlb
 
 PARTS = (1, 4, 16, 64)
 TLB = TLBConfig(entries=128, ways=4)
@@ -34,7 +35,7 @@ def _mix(n_ops, seed, spec):
     return inter, who, names
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "auto"):
     n_ops = 4_000 if quick else 10_000
     fp32 = 32 * GIB
     mixes = {
@@ -51,9 +52,15 @@ def run(quick: bool = False):
         cap = 2_400_000
         inter = inter[:cap]
         who = who[:inter.shape[0]]
+        # All partition counts share one batched pass over the mixed trace.
+        batched = sweep_tlb(
+            inter >> (12 - 6),
+            [TLBSweepSpec(TLB, num_partitions=p) for p in PARTS],
+            kernel_mode=kernel_mode,
+        )
         line = []
-        for p in PARTS:
-            res = tlbsim.simulate_tlb(inter >> (12 - 6), TLB, num_partitions=p)
+        for i_p, _ in enumerate(PARTS):
+            res = batched[i_p]
             n0 = res.hits.shape[0] - res.n_warm
             # Miss ratio observed by the BST-E threads only.
             is_bste = np.array([names[i] == "bst_external" for i in range(len(names))])[who[n0:]]

@@ -14,7 +14,8 @@ import numpy as np
 from benchmarks.common import Claim, W4, print_csv, save_fig, trace
 from repro.core import cpi
 from repro.core.sparta import SystemLatencies, TLBConfig
-from repro.core.tlbsim import SystemSimConfig, simulate_system
+from repro.core.sweep import sweep_system
+from repro.core.tlbsim import SystemSimConfig
 
 ENTRIES = (1, 2, 4, 8, 16, 32, 64, 128)
 P = 8
@@ -22,31 +23,35 @@ MEM_TLB = TLBConfig(entries=128, ways=4)
 CACHE = TLBConfig(entries=256, ways=4)  # 16KB / 64B lines
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "auto"):
     n_ops = 8_000 if quick else 25_000
     lat = SystemLatencies()
     results, rows = {}, []
     for w in W4:
         tr = trace(w, n_ops=n_ops)
         ipa = tr.instr_per_access
-        # Baseline: conventional, virtual cache + 128-entry accel TLB.
-        ev_base = simulate_system(tr.lines, SystemSimConfig(
+        # Baseline (conventional, virtual cache + 128-entry accel TLB), the
+        # accel-TLB capacity sweep, and the virtual-cache/no-TLB point all
+        # ride ONE batched pass over the trace.
+        cfgs = [SystemSimConfig(
             cache=CACHE, accel_tlb=TLBConfig(entries=128, ways=4),
-            mem_tlb=MEM_TLB, num_partitions=1, accel_probe_on_miss_only=True))
-        base = cpi.evaluate_design("conventional", ev_base, lat, instr_per_access=ipa)
+            mem_tlb=MEM_TLB, num_partitions=1, accel_probe_on_miss_only=True)]
+        cfgs += [SystemSimConfig(
+            cache=CACHE, accel_tlb=TLBConfig(entries=e, ways=4),
+            mem_tlb=MEM_TLB, num_partitions=P, accel_probe_on_miss_only=False)
+            for e in ENTRIES]
+        cfgs.append(SystemSimConfig(
+            cache=CACHE, accel_tlb=None, mem_tlb=MEM_TLB, num_partitions=P))
+        evs = sweep_system(tr.lines, cfgs, kernel_mode=kernel_mode)
 
+        base = cpi.evaluate_design("conventional", evs[0], lat, instr_per_access=ipa)
         line = []
-        for e in ENTRIES:
-            ev = simulate_system(tr.lines, SystemSimConfig(
-                cache=CACHE, accel_tlb=TLBConfig(entries=e, ways=min(4, e)),
-                mem_tlb=MEM_TLB, num_partitions=P, accel_probe_on_miss_only=False))
-            sp = cpi.evaluate_design("sparta", ev, lat, instr_per_access=ipa,
+        for i_e, _ in enumerate(ENTRIES):
+            sp = cpi.evaluate_design("sparta", evs[1 + i_e], lat, instr_per_access=ipa,
                                      physical_cache=True)
             line.append(float(sp.speedup_over(base)))
         # Virtual cache, no accel TLB.
-        ev_v = simulate_system(tr.lines, SystemSimConfig(
-            cache=CACHE, accel_tlb=None, mem_tlb=MEM_TLB, num_partitions=P))
-        sp_v = cpi.evaluate_design("sparta", ev_v, lat, instr_per_access=ipa)
+        sp_v = cpi.evaluate_design("sparta", evs[len(cfgs) - 1], lat, instr_per_access=ipa)
         line.append(float(sp_v.speedup_over(base)))
         results[w] = line
         rows.append([w] + line)

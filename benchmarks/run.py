@@ -1,13 +1,18 @@
 """Benchmark driver: one module per paper figure/table + kernels + roofline.
 
-``python -m benchmarks.run [--quick] [--only figN,...]``
+``python -m benchmarks.run [--quick] [--only figN,...] [--kernel-mode MODE]``
 Prints per-figure CSVs, the checked claims, and the roofline summary table
-(if the dry-run cache exists)."""
+(if the dry-run cache exists).  ``--kernel-mode`` selects the sweep-engine
+backend (auto/reference/pallas/pallas_interpret) for the figures that run
+trace sweeps (fig4/8/9/10)."""
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
+
+from repro.kernels.common import VALID_MODES
 
 
 FIGS = ("fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "kernels")
@@ -17,6 +22,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small traces (CI mode)")
     ap.add_argument("--only", default=None, help="comma-separated figure list")
+    ap.add_argument("--kernel-mode", default="auto", choices=VALID_MODES,
+                    help="sweep-engine backend for the trace-sweep figures")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -36,7 +43,10 @@ def main(argv=None) -> None:
     claims = []
     for name in chosen:
         t0 = time.time()
-        claims += modules[name].run(quick=args.quick)
+        kwargs = {"quick": args.quick}
+        if "kernel_mode" in inspect.signature(modules[name].run).parameters:
+            kwargs["kernel_mode"] = args.kernel_mode
+        claims += modules[name].run(**kwargs)
         print(f"  ({name}: {time.time()-t0:.1f}s)")
 
     print("\n# Claim summary")

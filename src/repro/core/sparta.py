@@ -47,7 +47,11 @@ class TLBConfig:
     page_shift: int = PAGE_SHIFT_4K
 
     def __post_init__(self):
-        if self.entries % self.ways:
+        if self.entries < 1 or self.ways < 1:
+            raise ValueError(f"entries={self.entries}, ways={self.ways}: must be >= 1")
+        # entries < ways is permitted: the structure degrades to fully-assoc of
+        # size `entries` (see effective_ways).  Otherwise ways must tile entries.
+        if self.entries > self.ways and self.entries % self.ways:
             raise ValueError(f"entries={self.entries} not divisible by ways={self.ways}")
 
     @property

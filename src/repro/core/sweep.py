@@ -1,0 +1,367 @@
+"""Batched multi-configuration sweep engine for the TLB/system simulator.
+
+Every paper figure (Figs 4, 8, 9, 10) sweeps TLB geometries and partition
+counts over the *same* trace.  The single-config simulators in
+:mod:`repro.core.tlbsim` replay the trace once per configuration; this module
+simulates **B configurations in a single pass**:
+
+* geometries are padded to a common ``(max_total_sets, max_ways)`` envelope,
+* per-config ``(tags, last)`` LRU state is stacked on a leading config axis
+  (mirroring SPARTA's own per-partition-TLB-array state layout, paper §4.2),
+* one ``lax.scan`` walks the trace while a vmapped probe updates all configs
+  concurrently, so the trace is streamed exactly once per sweep instead of
+  once per (trace x config) pair.
+
+Way-padding is made invisible by *poisoning* (see
+:func:`repro.core.tlbsim.padded_tlb_state`): the batched results are
+**bit-identical** to the per-config oracles :func:`~repro.core.tlbsim.simulate_tlb`
+and :func:`~repro.core.tlbsim.simulate_system`, which remain the reference
+path (tests/test_sweep.py asserts equivalence).
+
+``kernel_mode`` selects the execution backend for the TLB sweep: the batched
+Pallas TPU kernel (``repro.kernels.tlb_sim.tlb_sim_batched``, stacked VMEM
+scratch, trace blocks streamed HBM->VMEM once and shared by all configs) or
+the pure-JAX batched scan.  The joint system sweep has no Pallas kernel yet
+and always runs the batched JAX scan (the mode string is still validated so
+call sites can thread one ``kernel_mode`` everywhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparta import TLBConfig
+from repro.core.tlbsim import (
+    LINE_SHIFT,
+    SystemEvents,
+    SystemSimConfig,
+    TLBResult,
+    _geom,
+    _prepare_keys,
+    _scan_tlb_batched,
+    padded_tlb_state,
+)
+from repro.kernels.common import resolve_mode
+
+__all__ = [
+    "TLBSweepSpec",
+    "BatchedTLBResult",
+    "BatchedSystemEvents",
+    "sweep_tlb",
+    "sweep_system",
+]
+
+
+# ---------------------------------------------------------------------------
+# TLB sweep.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TLBSweepSpec:
+    """One point of a TLB sweep: geometry + partitioning + page size.
+
+    ``page_shift=None`` means the input stream is already a VPN stream;
+    otherwise the input is a 64-byte line-address stream and VPNs are derived
+    per spec (``lines >> (page_shift - LINE_SHIFT)``), so 4 KB and 2 MB
+    configs can ride in one batch.
+    """
+
+    cfg: TLBConfig
+    num_partitions: int = 1
+    page_shift: Optional[int] = None
+
+    @property
+    def geometry(self) -> Tuple[int, int]:
+        """(total_sets, ways) of the simulated structure."""
+        sets, ways = _geom(self.cfg)
+        return sets * self.num_partitions, ways
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedTLBResult:
+    """Per-access hit bits for B configs sharing one trace."""
+
+    hits: np.ndarray   # bool [B, N] (full stream, incl. warmup)
+    n_warm: int
+
+    def __len__(self) -> int:
+        return self.hits.shape[0]
+
+    def __getitem__(self, i: int) -> TLBResult:
+        return TLBResult(hits=self.hits[i], n_warm=self.n_warm)
+
+    @property
+    def miss_ratios(self) -> np.ndarray:
+        """Post-warmup miss ratio per config, [B]."""
+        w = self.hits[:, self.hits.shape[1] - self.n_warm:]
+        if w.shape[1] == 0:
+            return np.ones(self.hits.shape[0])
+        return 1.0 - w.mean(axis=1)
+
+
+# Per-core VMEM is ~16 MB on current TPUs; cap the stacked scratch state
+# (2 x B x S x W x int32) well below that and chunk the batch when a sweep's
+# padded envelope would not fit.  Chunks still stream the trace once each.
+_VMEM_STATE_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _sweep_keys(
+    addrs: np.ndarray, specs: Sequence[TLBSweepSpec]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stacked [B, N] (set, tag) streams, one row per spec."""
+    set_rows, tag_rows = [], []
+    for sp in specs:
+        vpns = addrs if sp.page_shift is None else addrs >> (sp.page_shift - LINE_SHIFT)
+        sets, _ = _geom(sp.cfg)
+        s, t = _prepare_keys(vpns, sets, sp.num_partitions)
+        set_rows.append(s)
+        tag_rows.append(t)
+    return np.stack(set_rows), np.stack(tag_rows)
+
+
+def sweep_tlb(
+    addrs: np.ndarray,
+    specs: Sequence[TLBSweepSpec],
+    *,
+    warmup_frac: float = 0.25,
+    kernel_mode: str = "auto",
+    block: int = 512,
+) -> BatchedTLBResult:
+    """Simulate every spec on one address stream in a single trace pass.
+
+    ``addrs`` is a VPN stream for specs with ``page_shift=None`` and a line
+    stream otherwise (mixing both in one batch is a caller error).  Results
+    are bit-identical to calling :func:`repro.core.tlbsim.simulate_tlb` once
+    per spec.
+    """
+    if not specs:
+        raise ValueError("sweep_tlb needs at least one spec")
+    shifted = [sp.page_shift is not None for sp in specs]
+    if any(shifted) and not all(shifted):
+        raise ValueError(
+            "sweep_tlb batch mixes page_shift=None (VPN-stream) specs with "
+            "page_shift-set (line-stream) specs; one input stream cannot be both"
+        )
+    mode = resolve_mode(kernel_mode)
+    set_b, tag_b = _sweep_keys(addrs, specs)
+    geoms = [sp.geometry for sp in specs]
+    total_sets = max(g[0] for g in geoms)
+    ways = max(g[1] for g in geoms)
+    valid_ways = tuple(g[1] for g in geoms)
+
+    n = set_b.shape[1]
+    if mode == "reference":
+        hits = np.asarray(
+            _scan_tlb_batched(jnp.asarray(set_b), jnp.asarray(tag_b), total_sets, ways, valid_ways)
+        )
+    else:
+        from repro.kernels.tlb_sim import tlb_sim_batched
+
+        pad = (-n) % min(block, n)
+        hits = np.empty((len(specs), n), dtype=bool)
+        for chunk in _vmem_chunks(geoms, block=min(block, n)):
+            c_sets = max(geoms[i][0] for i in chunk)
+            c_ways = max(geoms[i][1] for i in chunk)
+            s_c, t_c = set_b[chunk], tag_b[chunk]
+            if pad:
+                # The kernel streams whole blocks; park padding accesses in an
+                # extra set row (index c_sets) that no real config ever
+                # indexes, then drop their hit bits.
+                s_c = np.pad(s_c, ((0, 0), (0, pad)), constant_values=c_sets)
+                t_c = np.pad(t_c, ((0, 0), (0, pad)), constant_values=0)
+            hits[chunk] = np.asarray(
+                tlb_sim_batched(
+                    jnp.asarray(s_c), jnp.asarray(t_c),
+                    c_sets + (1 if pad else 0), c_ways,
+                    tuple(geoms[i][1] for i in chunk),
+                    block=block, kernel_mode=mode,
+                )
+            )[:, :n]
+    n0 = int(n * warmup_frac)
+    return BatchedTLBResult(hits=hits, n_warm=n - n0)
+
+
+def _vmem_chunks(geoms: Sequence[Tuple[int, int]], *, block: int = 512) -> list:
+    """Partition config indices so each chunk's VMEM footprint — stacked LRU
+    state (2 x B x max_sets x max_ways x int32) plus the streamed trace
+    blocks (3 x B x block x int32 for set/tag/hit) — fits the scratch budget.
+
+    Sorting by padded footprint groups like-sized geometries, so a few huge
+    configs don't inflate the envelope of every small one.  A chunk always
+    takes at least one config (a single config never exceeds VMEM for any
+    geometry in the paper's range).
+    """
+    order = sorted(range(len(geoms)), key=lambda i: geoms[i][0] * geoms[i][1])
+    chunks, cur = [], []
+    cur_sets = cur_ways = 0
+    for i in order:
+        b = len(cur) + 1
+        sets = max(cur_sets, geoms[i][0])
+        w = max(cur_ways, geoms[i][1])
+        # +1 set row: trace-padding accesses may get parked there.
+        vmem_bytes = (2 * (sets + 1) * w + 3 * block) * b * 4
+        if cur and vmem_bytes > _VMEM_STATE_BUDGET_BYTES:
+            chunks.append(cur)
+            cur = []
+            sets, w = geoms[i][0], geoms[i][1]
+        cur.append(i)
+        cur_sets, cur_ways = sets, w
+    chunks.append(cur)
+    return chunks
+
+
+# ---------------------------------------------------------------------------
+# Joint system sweep: cache + accel TLB + memory-side TLBs, B configs at once.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSystemEvents:
+    """Stacked per-access hit bits for B system configs on one trace."""
+
+    cache_hit: np.ndarray      # bool [B, N]
+    accel_tlb_hit: np.ndarray  # bool [B, N]
+    mem_tlb_hit: np.ndarray    # bool [B, N]
+    n_warm: int
+
+    def __len__(self) -> int:
+        return self.cache_hit.shape[0]
+
+    def __getitem__(self, i: int) -> SystemEvents:
+        return SystemEvents(
+            cache_hit=self.cache_hit[i],
+            accel_tlb_hit=self.accel_tlb_hit[i],
+            mem_tlb_hit=self.mem_tlb_hit[i],
+            n_warm=self.n_warm,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "valid"))
+def _scan_system_batched(
+    inputs,   # 6 x int32 [B, N]: cache/accel/mem (set, tag) streams
+    flags,    # 3 x bool  [B]:    has_cache, has_accel, accel_on_miss_only
+    geom: Tuple[int, int, int, int, int, int],
+    valid: Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]],
+):
+    """Batched joint pipeline scan; per-config semantics identical to
+    :func:`repro.core.tlbsim._scan_system` (structure presence and the
+    virtual-cache probe policy become per-config data instead of static
+    Python flags)."""
+    (c_set, c_tag, a_set, a_tag, m_set, m_tag) = inputs
+    has_cache, has_accel, on_miss_only = flags
+    cs, cw, asets, aw, ms, mw = geom
+    B = c_set.shape[0]
+
+    state0 = (
+        *padded_tlb_state(B, cs, cw, valid[0]),
+        *padded_tlb_state(B, asets, aw, valid[1]),
+        *padded_tlb_state(B, ms, mw, valid[2]),
+    )
+
+    def probe(tags, last, s, t, now, do_update):
+        row_t = tags[s]
+        hit_vec = row_t == t
+        hit = jnp.any(hit_vec)
+        way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(last[s]))
+        tags = tags.at[s, way].set(jnp.where(do_update, t, tags[s, way]))
+        last = last.at[s, way].set(jnp.where(do_update, now, last[s, way]))
+        return tags, last, hit
+
+    def step_one(state_b, flags_b, inp_b, now):
+        ct, cl, at, al, mt, ml = state_b
+        has_c, has_a, miss_only = flags_b
+        cs_i, ctag_i, as_i, atag_i, ms_i, mtag_i = inp_b
+        ct, cl, c_raw = probe(ct, cl, cs_i, ctag_i, now, has_c)
+        c_hit = jnp.where(has_c, c_raw, jnp.bool_(False))
+        # Physical cache: accel TLB probed every access.  Virtual cache: only
+        # on cache misses (translation needed only to leave the accelerator).
+        do_a = jnp.where(miss_only, ~c_hit, jnp.bool_(True)) & has_a
+        at, al, a_raw = probe(at, al, as_i, atag_i, now, do_a)
+        a_hit = jnp.where(
+            has_a, jnp.where(do_a, a_raw, jnp.bool_(True)), jnp.bool_(False)
+        )
+        # Memory-side TLB sees only cache misses (hits never leave the accel).
+        mt, ml, m_raw = probe(mt, ml, ms_i, mtag_i, now, ~c_hit)
+        m_hit = jnp.where(~c_hit, m_raw, jnp.bool_(True))
+        return (ct, cl, at, al, mt, ml), (c_hit, a_hit, m_hit)
+
+    vstep = jax.vmap(step_one, in_axes=(0, 0, 0, None))
+
+    def step(state, inp):
+        *streams, now = inp
+        return vstep(state, flags, tuple(streams), now)
+
+    n = c_set.shape[1]
+    now = jnp.arange(1, n + 1, dtype=jnp.int32)
+    xs = tuple(x.T for x in inputs) + (now,)
+    (_, ys) = jax.lax.scan(step, state0, xs)
+    return tuple(y.T for y in ys)
+
+
+def _system_keys(lines: np.ndarray, cfg: SystemSimConfig):
+    """Per-config (cache, accel, mem) (set, tag) streams — the exact key
+    preparation of :func:`repro.core.tlbsim.simulate_system`."""
+    vpns = lines >> (cfg.page_shift - LINE_SHIFT)
+    n = lines.shape[0]
+    zeros = np.zeros(n, np.int32)
+
+    cs, _ = _geom(cfg.cache)
+    c_set, c_tag = _prepare_keys(lines, cs, 1) if cfg.cache is not None else (zeros, zeros)
+    asets, _ = _geom(cfg.accel_tlb)
+    a_set, a_tag = _prepare_keys(vpns, asets, 1) if cfg.accel_tlb is not None else (zeros, zeros)
+    ms, _ = _geom(cfg.mem_tlb)
+    m_set, m_tag = _prepare_keys(vpns, ms, cfg.num_partitions)
+    return c_set, c_tag, a_set, a_tag, m_set, m_tag
+
+
+def sweep_system(
+    lines: np.ndarray,
+    cfgs: Sequence[SystemSimConfig],
+    *,
+    warmup_frac: float = 0.25,
+    kernel_mode: str = "auto",
+) -> BatchedSystemEvents:
+    """Run the joint cache + accel-TLB + memory-TLB pipeline for every config
+    in ONE pass over the line trace.
+
+    Configs may differ in every dimension (cache/accel presence, geometries,
+    partitions, page size, probe policy); results are bit-identical to
+    calling :func:`repro.core.tlbsim.simulate_system` once per config.
+    """
+    if not cfgs:
+        raise ValueError("sweep_system needs at least one config")
+    resolve_mode(kernel_mode)  # validated; the joint sweep is JAX-only so far
+
+    streams = [np.stack(rows) for rows in zip(*(_system_keys(lines, c) for c in cfgs))]
+
+    def envelope(geoms):
+        return max(g[0] for g in geoms), max(g[1] for g in geoms), tuple(g[1] for g in geoms)
+
+    c_geo = [_geom(c.cache) for c in cfgs]
+    a_geo = [_geom(c.accel_tlb) for c in cfgs]
+    m_geo = [(_geom(c.mem_tlb)[0] * c.num_partitions, _geom(c.mem_tlb)[1]) for c in cfgs]
+    cs, cw, c_valid = envelope(c_geo)
+    asets, aw, a_valid = envelope(a_geo)
+    ms, mw, m_valid = envelope(m_geo)
+
+    flags = tuple(
+        jnp.asarray([f(c) for c in cfgs], jnp.bool_)
+        for f in (
+            lambda c: c.cache is not None,
+            lambda c: c.accel_tlb is not None,
+            lambda c: c.accel_probe_on_miss_only,
+        )
+    )
+    ys = _scan_system_batched(
+        tuple(jnp.asarray(s) for s in streams),
+        flags,
+        (cs, cw, asets, aw, ms, mw),
+        (c_valid, a_valid, m_valid),
+    )
+    c_hit, a_hit, m_hit = (np.asarray(y) for y in ys)
+    n0 = int(lines.shape[0] * warmup_frac)
+    return BatchedSystemEvents(c_hit, a_hit, m_hit, n_warm=lines.shape[0] - n0)

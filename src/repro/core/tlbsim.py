@@ -90,6 +90,71 @@ def _scan_tlb(set_idx: jnp.ndarray, tag: jnp.ndarray, total_sets: int, ways: int
     return hits
 
 
+_POISON_TAG = -2          # never matches a real tag (tags are >= 0, empty = -1)
+_POISON_LAST = 2**31 - 1  # argmin never selects a poisoned way (real last <= N)
+# (also used by the batched Pallas kernel, repro.kernels.tlb_sim.kernel)
+
+
+def padded_tlb_state(
+    num_cfgs: int, total_sets: int, ways: int, valid_ways: Tuple[int, ...]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Initial stacked (tags, last) for a batch of configs padded to a common
+    ``(total_sets, ways)`` envelope.
+
+    Ways beyond config ``b``'s ``valid_ways[b]`` are *poisoned*: their tag can
+    never match (real tags are non-negative, empty ways hold -1) and their
+    last-use stamp is so large that LRU replacement never selects them, so the
+    padded simulation is bit-identical to each config's unpadded one.  Padded
+    *sets* need no poisoning — a config's set indices never reach them.
+    """
+    vw = jnp.asarray(valid_ways, jnp.int32)[:, None, None]
+    way_ix = jax.lax.broadcasted_iota(jnp.int32, (num_cfgs, total_sets, ways), 2)
+    pad = way_ix >= vw
+    tags0 = jnp.where(pad, _POISON_TAG, -1).astype(jnp.int32)
+    last0 = jnp.where(pad, _POISON_LAST, 0).astype(jnp.int32)
+    return tags0, last0
+
+
+@functools.partial(jax.jit, static_argnames=("total_sets", "ways", "valid_ways"))
+def _scan_tlb_batched(
+    set_idx: jnp.ndarray,   # int32 [B, N]
+    tag: jnp.ndarray,       # int32 [B, N]
+    total_sets: int,        # padded envelope (max over configs)
+    ways: int,              # padded envelope (max over configs)
+    valid_ways: Tuple[int, ...],
+):
+    """Batched sequential LRU simulation: B configs advance in lock-step
+    through ONE scan over the trace.  Returns hit bits [B, N].
+
+    Per-config semantics are bit-identical to :func:`_scan_tlb` on that
+    config's own geometry (see :func:`padded_tlb_state` for why padding is
+    invisible)."""
+    tags0, last0 = padded_tlb_state(set_idx.shape[0], total_sets, ways, valid_ways)
+
+    def probe(tags_b, last_b, s, t, now):
+        row_t = tags_b[s]
+        row_l = last_b[s]
+        hit_vec = row_t == t
+        hit = jnp.any(hit_vec)
+        way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+        tags_b = tags_b.at[s, way].set(t)
+        last_b = last_b.at[s, way].set(now)
+        return tags_b, last_b, hit
+
+    def step(state, inp):
+        tags, last = state
+        s, t, now = inp
+        tags, last, hit = jax.vmap(probe, in_axes=(0, 0, 0, 0, None))(
+            tags, last, s, t, now
+        )
+        return (tags, last), hit
+
+    n = set_idx.shape[1]
+    now = jnp.arange(1, n + 1, dtype=jnp.int32)
+    (_, _), hits = jax.lax.scan(step, (tags0, last0), (set_idx.T, tag.T, now))
+    return hits.T
+
+
 def simulate_tlb(
     vpns: np.ndarray,
     cfg: TLBConfig,
@@ -302,7 +367,8 @@ def miss_ratio(
     ways: int = 4,
     num_partitions: int = 1,
 ) -> float:
-    return simulate_tlb(vpns, TLBConfig(entries=entries, ways=min(ways, entries)), num_partitions=num_partitions).miss_ratio
+    # TLBConfig normalizes entries < ways itself (effective_ways).
+    return simulate_tlb(vpns, TLBConfig(entries=entries, ways=ways), num_partitions=num_partitions).miss_ratio
 
 
 def miss_ratio_curve(
@@ -312,8 +378,20 @@ def miss_ratio_curve(
     ways: int = 4,
     num_partitions: int = 1,
     page_shift: int = 12,
+    kernel_mode: str = "auto",
 ) -> "np.ndarray":
-    vpns = lines >> (page_shift - LINE_SHIFT)
-    return np.array(
-        [miss_ratio(vpns, int(e), ways=ways, num_partitions=num_partitions) for e in sizes]
-    )
+    """Miss ratio at each TLB size, via the batched sweep engine: the trace is
+    scanned ONCE for all sizes (state padded to the largest geometry), not once
+    per size.  ``repro.core.sweep`` holds the engine; :func:`simulate_tlb`
+    remains the single-config oracle path."""
+    from repro.core import sweep  # local import: sweep builds on this module
+
+    specs = [
+        sweep.TLBSweepSpec(
+            cfg=TLBConfig(entries=int(e), ways=ways),
+            num_partitions=num_partitions,
+            page_shift=page_shift,
+        )
+        for e in sizes
+    ]
+    return sweep.sweep_tlb(lines, specs, kernel_mode=kernel_mode).miss_ratios

@@ -1,1 +1,1 @@
-from repro.kernels.tlb_sim.ops import tlb_sim  # noqa: F401
+from repro.kernels.tlb_sim.ops import tlb_sim, tlb_sim_batched  # noqa: F401

@@ -8,18 +8,32 @@ across grid steps while each step streams one trace block HBM->VMEM.  The
 simulated per-partition TLB array (SPARTA's "divide") is the leading state
 dimension: probing partition p touches only rows [p*sets, (p+1)*sets).
 
+``tlb_sim_batched_pallas`` adds a **config batch dimension** for the sweep
+engine (:mod:`repro.core.sweep`): B configs' states are stacked as the
+leading VMEM scratch axis and each grid step fetches one trace block
+HBM->VMEM once, carrying every config's (set, tag) view of that chunk, so
+all configs advance through the trace together in a single pallas_call.
+Geometry padding is poisoned exactly like the host-side batched scan
+(`padded_tlb_state`), keeping the kernel bit-identical per config.
+
 The access loop is inherently serial (LRU state carries a dependency), but
 each probe is a W-wide vector compare/select — the VPU lanes handle the
-ways.  The host-side oracle is ``repro.core.tlbsim._scan_tlb``.
+ways.  The host-side oracles are ``repro.core.tlbsim._scan_tlb`` and
+``repro.core.tlbsim._scan_tlb_batched``.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# Shared with the host-side batched oracle: kernel/oracle bit-identity
+# depends on both using the same poison scheme.
+from repro.core.tlbsim import _POISON_LAST, _POISON_TAG
 
 
 def _tlb_kernel(
@@ -80,6 +94,94 @@ def tlb_sim_pallas(
         scratch_shapes=[
             pltpu.VMEM((total_sets, ways), jnp.int32),
             pltpu.VMEM((total_sets, ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )(set_idx.astype(jnp.int32), tag.astype(jnp.int32))
+    return hits.astype(bool)
+
+
+def _tlb_batched_kernel(
+    set_ref, tag_ref,     # int32 [B, BLK] trace block (all configs' key views)
+    hit_ref,              # int32 [B, BLK] output
+    tags_scr, last_scr,   # [B, TS, W] persistent stacked VMEM state
+    *,
+    block: int,
+    num_cfgs: int,
+    valid_ways: Tuple[int, ...],
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # Poison ways beyond each config's associativity: their tag never
+        # matches and their last-use stamp is never the LRU minimum.
+        # valid_ways is static, so the per-config masks are compile-time
+        # constants (no captured arrays), unrolled over the B axis.
+        way_ix = jax.lax.broadcasted_iota(jnp.int32, tags_scr.shape[1:], 1)
+        for b, vw in enumerate(valid_ways):
+            pad = way_ix >= vw
+            tags_scr[b, :, :] = jnp.where(pad, _POISON_TAG, -1).astype(jnp.int32)
+            last_scr[b, :, :] = jnp.where(pad, _POISON_LAST, 0).astype(jnp.int32)
+
+    base = i * block
+
+    def access(j, _):
+        now = base + j + 1
+
+        def per_cfg(b, _):
+            s = set_ref[b, j]
+            t = tag_ref[b, j]
+            row_t = tags_scr[b, s, :]
+            row_l = last_scr[b, s, :]
+            hit_vec = row_t == t
+            hit = jnp.any(hit_vec)
+            way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+            tags_scr[b, s, way] = t
+            last_scr[b, s, way] = now
+            hit_ref[b, j] = hit.astype(jnp.int32)
+            return 0
+
+        jax.lax.fori_loop(0, num_cfgs, per_cfg, 0)
+        return 0
+
+    jax.lax.fori_loop(0, block, access, 0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("total_sets", "ways", "valid_ways", "block", "interpret"),
+)
+def tlb_sim_batched_pallas(
+    set_idx: jnp.ndarray,   # int32 [B, N]
+    tag: jnp.ndarray,       # int32 [B, N]
+    total_sets: int,
+    ways: int,
+    valid_ways: Tuple[int, ...],
+    *,
+    block: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """B-config batched LRU simulation; returns hit bits bool [B, N]."""
+    num_cfgs, n = set_idx.shape
+    assert len(valid_ways) == num_cfgs
+    block = min(block, n)
+    assert n % block == 0, f"trace length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    hits = pl.pallas_call(
+        functools.partial(
+            _tlb_batched_kernel,
+            block=block, num_cfgs=num_cfgs, valid_ways=valid_ways,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((num_cfgs, block), lambda i: (0, i)),
+            pl.BlockSpec((num_cfgs, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((num_cfgs, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((num_cfgs, n), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((num_cfgs, total_sets, ways), jnp.int32),
+            pltpu.VMEM((num_cfgs, total_sets, ways), jnp.int32),
         ],
         interpret=interpret,
     )(set_idx.astype(jnp.int32), tag.astype(jnp.int32))

@@ -1,13 +1,15 @@
-"""Public TLB-simulation op with kernel-mode dispatch."""
+"""Public TLB-simulation ops with kernel-mode dispatch."""
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 import jax.numpy as jnp
 
 from repro.kernels.common import resolve_mode
-from repro.kernels.tlb_sim.kernel import tlb_sim_pallas
-from repro.kernels.tlb_sim.ref import tlb_sim_ref
+from repro.kernels.tlb_sim.kernel import tlb_sim_batched_pallas, tlb_sim_pallas
+from repro.kernels.tlb_sim.ref import tlb_sim_batched_ref, tlb_sim_ref
 
-__all__ = ["tlb_sim"]
+__all__ = ["tlb_sim", "tlb_sim_batched"]
 
 
 def tlb_sim(
@@ -24,5 +26,29 @@ def tlb_sim(
         return tlb_sim_ref(set_idx, tag, total_sets, ways)
     return tlb_sim_pallas(
         set_idx, tag, total_sets, ways,
+        block=block, interpret=(mode == "pallas_interpret"),
+    )
+
+
+def tlb_sim_batched(
+    set_idx: jnp.ndarray,   # int32 [B, N]
+    tag: jnp.ndarray,       # int32 [B, N]
+    total_sets: int,        # padded envelope over configs
+    ways: int,              # padded envelope over configs
+    valid_ways: Optional[Sequence[int]] = None,
+    *,
+    block: int = 512,
+    kernel_mode: str = "auto",
+) -> jnp.ndarray:
+    """Batched-config TLB simulation (the sweep-engine hot loop): B configs'
+    LRU states advance together through ONE pass over the trace.  Returns
+    hit bits bool [B, N]; bit-identical per config to :func:`tlb_sim` on
+    that config's own (unpadded) geometry."""
+    vw = tuple(valid_ways) if valid_ways is not None else (ways,) * set_idx.shape[0]
+    mode = resolve_mode(kernel_mode)
+    if mode == "reference":
+        return tlb_sim_batched_ref(set_idx, tag, total_sets, ways, vw)
+    return tlb_sim_batched_pallas(
+        set_idx, tag, total_sets, ways, vw,
         block=block, interpret=(mode == "pallas_interpret"),
     )

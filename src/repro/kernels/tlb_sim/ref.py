@@ -1,11 +1,24 @@
-"""Oracle for the TLB-simulation kernel = the scan in repro.core.tlbsim."""
+"""Oracles for the TLB-simulation kernels = the scans in repro.core.tlbsim."""
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax.numpy as jnp
 
-from repro.core.tlbsim import _scan_tlb
+from repro.core.tlbsim import _scan_tlb, _scan_tlb_batched
 
 
 def tlb_sim_ref(set_idx: jnp.ndarray, tag: jnp.ndarray, total_sets: int, ways: int) -> jnp.ndarray:
     """Per-access hit bits (bool) for a set-associative LRU structure."""
     return _scan_tlb(set_idx, tag, total_sets, ways)
+
+
+def tlb_sim_batched_ref(
+    set_idx: jnp.ndarray,
+    tag: jnp.ndarray,
+    total_sets: int,
+    ways: int,
+    valid_ways: Tuple[int, ...],
+) -> jnp.ndarray:
+    """Hit bits (bool [B, N]) for B configs advancing through one trace pass."""
+    return _scan_tlb_batched(set_idx, tag, total_sets, ways, valid_ways)

@@ -1,0 +1,87 @@
+"""Property-test shim: real ``hypothesis`` when installed, otherwise a
+deterministic fallback with the same surface (``given``, ``settings``,
+``strategies as st``) so the suite passes either way.
+
+The fallback enumerates a fixed, seeded set of examples per strategy —
+boundary values plus a few interior points — and runs the test body once per
+combination.  It intentionally implements only what this repo's tests use:
+``st.integers(lo, hi)``, ``st.sampled_from(seq)``, ``st.randoms()`` and
+``st.composite``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import itertools
+    import random
+
+    class _Strategy:
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies` import style
+        @staticmethod
+        def integers(min_value, max_value):
+            rng = random.Random(f"{min_value}:{max_value}")
+            interior = (rng.randint(min_value, max_value) for _ in range(4))
+            return _Strategy(dict.fromkeys([min_value, max_value, *interior]))
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+        @staticmethod
+        def randoms():
+            return _Strategy([random.Random(seed) for seed in range(3)])
+
+        @staticmethod
+        def composite(fn):
+            """fn(draw, *args) -> example; the strategy enumerates a few
+            seeded draw sequences."""
+
+            def call(*args, **kwargs):
+                examples = []
+                for seed in range(8):
+                    rng = random.Random(seed)
+                    draw = lambda strategy, rng=rng: rng.choice(strategy.examples)
+                    examples.append(fn(draw, *args, **kwargs))
+                return _Strategy(examples)
+
+            return call
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                pools = [s.examples for s in strats]
+                total = 1
+                for p in pools:
+                    total *= len(p)
+                if total <= 64:
+                    combos = itertools.product(*pools)
+                else:  # align pools by cycling the shorter ones
+                    n = max(len(p) for p in pools)
+                    combos = zip(*(itertools.islice(itertools.cycle(p), n) for p in pools))
+                for combo in combos:
+                    fn(*args, *combo, **kwargs)
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (hypothesis's @given does the same).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

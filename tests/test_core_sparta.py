@@ -1,7 +1,7 @@
 """Core SPARTA invariants: partition hash, timelines, TLB simulator."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import tlbsim, traces
 from repro.core.sparta import (

@@ -9,7 +9,7 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mamba2_scan import mamba2_scan
 from repro.kernels.paged_attention import merge_partials, paged_attention
 from repro.kernels.rwkv6_scan import rwkv6_scan
-from repro.kernels.tlb_sim import tlb_sim
+from repro.kernels.tlb_sim import tlb_sim, tlb_sim_batched
 from repro.models.flash_ref import flash_attention_jnp
 
 
@@ -124,3 +124,20 @@ def test_tlb_sim_kernel_bit_exact(rng, TS, W, N, blk):
     ref = tlb_sim(s, t, TS, W, kernel_mode="reference")
     pal = tlb_sim(s, t, TS, W, block=blk, kernel_mode="pallas_interpret")
     assert (np.asarray(ref) == np.asarray(pal)).all()
+
+
+@pytest.mark.parametrize("TS,W,N,blk,valid", [
+    (16, 4, 1024, 256, (4, 2, 1)),    # heterogeneous associativity
+    (32, 4, 512, 128, (4, 4, 4, 3)),
+])
+def test_tlb_sim_batched_kernel_bit_exact(rng, TS, W, N, blk, valid):
+    B = len(valid)
+    s = jnp.asarray(rng.integers(0, TS, (B, N)), jnp.int32)
+    t = jnp.asarray(rng.integers(0, 50, (B, N)), jnp.int32)
+    ref = tlb_sim_batched(s, t, TS, W, valid, kernel_mode="reference")
+    pal = tlb_sim_batched(s, t, TS, W, valid, block=blk, kernel_mode="pallas_interpret")
+    assert (np.asarray(ref) == np.asarray(pal)).all()
+    # Each batched row == the single-config kernel on that config's geometry.
+    for b in range(B):
+        one = tlb_sim(s[b], t[b], TS, valid[b], kernel_mode="reference")
+        assert (np.asarray(ref[b]) == np.asarray(one)).all()

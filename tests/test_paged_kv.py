@@ -2,7 +2,7 @@
 transplanted to serving: demand allocation, CoW, partition invariant)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core.paged_kv import FREE, PagedKVConfig, SpartaKVManager, partition_of
 

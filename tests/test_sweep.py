@@ -1,0 +1,198 @@
+"""Oracle-equivalence for the batched sweep engine (repro.core.sweep).
+
+The per-config simulators ``simulate_tlb`` / ``simulate_system`` are the
+reference path; every batched result must match them **bit-exactly** across
+randomized traces, mixed geometries (including entries < ways), partition
+counts, page sizes, and absent structures.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.core import sweep, tlbsim, traces
+from repro.core.sparta import TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_system, sweep_tlb
+from repro.core.tlbsim import SystemSimConfig, _prepare_keys, simulate_system, simulate_tlb
+
+PARTITIONS = (1, 4, 32)
+
+
+def _random_vpns(seed: int, n: int = 2500, span: int = 6000) -> np.ndarray:
+    return np.random.default_rng(seed).integers(0, span, n).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# sweep_tlb vs simulate_tlb
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 10_000), st.sampled_from(PARTITIONS))
+def test_sweep_tlb_bitexact_vs_oracle(seed, P):
+    vpns = _random_vpns(seed)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=2, ways=4), num_partitions=P),   # entries < ways
+        TLBSweepSpec(TLBConfig(entries=16, ways=2), num_partitions=P),
+        TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=1),
+        TLBSweepSpec(TLBConfig(entries=128, ways=8), num_partitions=P),
+        TLBSweepSpec(TLBConfig(entries=1, ways=1), num_partitions=P),   # degenerate
+    ]
+    res = sweep_tlb(vpns, specs)
+    assert res.hits.shape == (len(specs), vpns.shape[0])
+    for i, sp in enumerate(specs):
+        ref = simulate_tlb(vpns, sp.cfg, num_partitions=sp.num_partitions)
+        np.testing.assert_array_equal(res.hits[i], ref.hits)
+        assert res[i].miss_ratio == ref.miss_ratio
+    np.testing.assert_allclose(
+        res.miss_ratios, [res[i].miss_ratio for i in range(len(specs))]
+    )
+
+
+def test_sweep_tlb_mixed_page_shifts_on_line_trace():
+    """4 KB and 2 MB configs in one batch over a line-address trace."""
+    tr = traces.generate("bst_internal", n_ops=1500, footprint_bytes=1 << 32)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=4, page_shift=12),
+        TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=4, page_shift=21),
+        TLBSweepSpec(TLBConfig(entries=256, ways=4), num_partitions=1, page_shift=12),
+    ]
+    res = sweep_tlb(tr.lines, specs)
+    for i, sp in enumerate(specs):
+        vpns = tr.lines >> (sp.page_shift - tlbsim.LINE_SHIFT)
+        ref = simulate_tlb(vpns, sp.cfg, num_partitions=sp.num_partitions)
+        np.testing.assert_array_equal(res.hits[i], ref.hits)
+
+
+def test_sweep_tlb_matches_kernel_interpret_path():
+    """Pallas interpret path == reference path, incl. trace padding to blocks."""
+    vpns = _random_vpns(7, n=1111)  # deliberately not a multiple of any block
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=8, ways=4), num_partitions=4),
+        TLBSweepSpec(TLBConfig(entries=32, ways=2)),
+    ]
+    ref = sweep_tlb(vpns, specs, kernel_mode="reference")
+    pal = sweep_tlb(vpns, specs, kernel_mode="pallas_interpret", block=256)
+    np.testing.assert_array_equal(pal.hits, ref.hits)
+
+
+def test_miss_ratio_curve_equals_per_config_loop():
+    """The rewired miss_ratio_curve (sweep engine) == looping the oracle."""
+    tr = traces.generate("hash_table", n_ops=1500, footprint_bytes=1 << 30)
+    sizes = (4, 16, 64, 256)
+    curve = tlbsim.miss_ratio_curve(tr.lines, sizes, num_partitions=4)
+    vpns = tr.lines >> (12 - tlbsim.LINE_SHIFT)
+    loop = [tlbsim.miss_ratio(vpns, e, num_partitions=4) for e in sizes]
+    np.testing.assert_allclose(curve, loop)
+
+
+def test_sweep_tlb_single_trace_pass(monkeypatch):
+    """The engine invokes ONE batched scan per sweep — never the per-config
+    scan — regardless of how many configs ride along (the fig4 property)."""
+    calls = {"batched": 0}
+    real_batched = sweep._scan_tlb_batched
+
+    def counting_batched(*a, **k):
+        calls["batched"] += 1
+        return real_batched(*a, **k)
+
+    monkeypatch.setattr(sweep, "_scan_tlb_batched", counting_batched)
+    monkeypatch.setattr(
+        tlbsim, "_scan_tlb",
+        lambda *a, **k: pytest.fail("per-config scan used inside sweep"),
+    )
+    vpns = _random_vpns(3, n=800)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=e, ways=4), num_partitions=p)
+        for e in (4, 16, 64) for p in PARTITIONS
+    ]
+    sweep_tlb(vpns, specs, kernel_mode="reference")
+    assert calls["batched"] == 1
+
+
+# ---------------------------------------------------------------------------
+# sweep_system vs simulate_system
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=4)
+@given(st.integers(0, 10_000))
+def test_sweep_system_bitexact_vs_oracle(seed):
+    lines = np.random.default_rng(seed).integers(0, 1 << 28, 2000).astype(np.int64)
+    cfgs = [
+        SystemSimConfig(),  # defaults: cache, no accel TLB, P=1
+        SystemSimConfig(cache=None, num_partitions=8),  # cacheless accelerator
+        SystemSimConfig(  # physical cache: accel TLB probed every access
+            accel_tlb=TLBConfig(entries=8, ways=4),
+            num_partitions=4, accel_probe_on_miss_only=False),
+        SystemSimConfig(  # 2 MB pages + tiny (entries < ways) accel TLB
+            accel_tlb=TLBConfig(entries=2, ways=4),
+            page_shift=21, num_partitions=32),
+        SystemSimConfig(mem_tlb=TLBConfig(entries=64, ways=8), num_partitions=1),
+    ]
+    bev = sweep_system(lines, cfgs)
+    assert len(bev) == len(cfgs)
+    for i, c in enumerate(cfgs):
+        ev = simulate_system(lines, c)
+        np.testing.assert_array_equal(bev.cache_hit[i], ev.cache_hit)
+        np.testing.assert_array_equal(bev.accel_tlb_hit[i], ev.accel_tlb_hit)
+        np.testing.assert_array_equal(bev.mem_tlb_hit[i], ev.mem_tlb_hit)
+        one = bev[i]
+        assert one.cache_hit_ratio == ev.cache_hit_ratio
+        assert one.mem_tlb_hit_ratio_given_cache_miss() == ev.mem_tlb_hit_ratio_given_cache_miss()
+
+
+def test_sweep_rejects_empty_batches():
+    with pytest.raises(ValueError):
+        sweep_tlb(np.zeros(4, np.int64), [])
+    with pytest.raises(ValueError):
+        sweep_system(np.zeros(4, np.int64), [])
+
+
+def test_sweep_tlb_rejects_mixed_stream_kinds():
+    """One batch cannot interpret the input as both VPNs and line addresses."""
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=8, ways=4), page_shift=12),
+        TLBSweepSpec(TLBConfig(entries=8, ways=4)),  # page_shift=None
+    ]
+    with pytest.raises(ValueError, match="mixes"):
+        sweep_tlb(np.zeros(16, np.int64), specs)
+
+
+def test_sweep_tlb_kernel_chunking_under_tight_vmem_budget(monkeypatch):
+    """When the padded envelope exceeds the VMEM scratch budget the kernel
+    path splits the batch into like-sized chunks — results unchanged."""
+    monkeypatch.setattr(sweep, "_VMEM_STATE_BUDGET_BYTES", 16 * 1024)
+    vpns = _random_vpns(11, n=1000)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=e, ways=4), num_partitions=p)
+        for e in (4, 64, 256) for p in (1, 4)
+    ]
+    geoms = [sp.geometry for sp in specs]
+    assert len(sweep._vmem_chunks(geoms)) > 1  # budget actually forces a split
+    ref = sweep_tlb(vpns, specs, kernel_mode="reference")
+    pal = sweep_tlb(vpns, specs, kernel_mode="pallas_interpret", block=256)
+    np.testing.assert_array_equal(pal.hits, ref.hits)
+    # Every config index lands in exactly one chunk.
+    seen = sorted(i for c in sweep._vmem_chunks(geoms) for i in c)
+    assert seen == list(range(len(specs)))
+
+
+# ---------------------------------------------------------------------------
+# Key-preparation regressions.
+# ---------------------------------------------------------------------------
+
+def test_prepare_keys_raises_on_int32_tag_overflow():
+    vpns = np.array([2**42], np.int64)  # tag = vpn // sets >= 2**31 at sets=1
+    with pytest.raises(ValueError, match="tag overflow"):
+        _prepare_keys(vpns, sets=1, num_partitions=1)
+    # The same key space partitioned enough is fine (tag shrinks by P * sets).
+    set_idx, tag = _prepare_keys(vpns, sets=1 << 10, num_partitions=4)
+    assert tag.dtype == np.int32
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(0, 2**25 - 1), st.sampled_from(PARTITIONS), st.sampled_from([1, 4, 64]))
+def test_partition_invariant_of_prepare_keys(vpn, P, sets):
+    """The paper's invariant: the global set index always lands inside the
+    partition named by MEM_PARTITION_INDEX_HASH (set_idx // sets == vpn % P)."""
+    set_idx, _ = _prepare_keys(np.array([vpn], np.int64), sets, P)
+    assert set_idx[0] // sets == vpn % P
+    assert 0 <= set_idx[0] < sets * P
