@@ -38,8 +38,10 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
     rows = []
     for w in W4:
         tr = trace(w, n_ops=n_ops)
-        # Every (config, size) point rides one batched sweep: the trace is
-        # scanned ONCE per workload, not once per (config x size) pair.
+        # Every (config, size) point rides one batched sweep.  Under the
+        # default kernel_mode the stack-distance backend buckets these specs
+        # by (sets, partitions, page_shift) and runs one data-parallel depth
+        # pass per bucket — no per-access sequential scan at all.
         specs = [
             TLBSweepSpec(TLBConfig(entries=int(s), ways=4),
                          num_partitions=parts, page_shift=shift)

@@ -52,7 +52,9 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
         cap = 2_400_000
         inter = inter[:cap]
         who = who[:inter.shape[0]]
-        # All partition counts share one batched pass over the mixed trace.
+        # All partition counts ride one batched sweep over the mixed trace
+        # (one stack-distance pass per partition count under the default
+        # kernel_mode: each P is its own set-mapping bucket).
         batched = sweep_tlb(
             inter >> (12 - 6),
             [TLBSweepSpec(TLB, num_partitions=p) for p in PARTS],

@@ -3,9 +3,16 @@
 On this CPU container the timing column measures the *reference* (XLA) path
 (the Pallas kernels execute via the interpreter, which is not representative
 of TPU performance); the allclose column is the correctness deliverable.
+
+The sweep-engine section times the batched-scan reference against the exact
+stack-distance backend on a fig4-style sweep and appends the result to
+``BENCH_sweep.json`` at the repo root, so the perf trajectory is tracked
+PR-over-PR.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -13,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_csv, save_fig
+
+BENCH_SWEEP_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
 
 
 def _timeit(fn, *args, reps=5):
@@ -93,8 +102,94 @@ def run(quick: bool = False):
     us = _timeit(lambda a, b: tlb_sim(a, b, 64, 4, kernel_mode="reference"), s, t)
     rows.append(["tlb_sim", us, err])
 
+    # stackdist segmented stack scan
+    from repro.kernels.stackdist import stack_scan
+    L, C, W = 8, 128, 4
+    tags = jnp.asarray(rng.integers(0, 40, (L, C)), jnp.int32)
+    flags = np.zeros((L, C), bool)
+    flags[:, 0] = True
+    flags[rng.random((L, C)) < 0.02] = True
+    flags = jnp.asarray(flags)
+    init = jnp.asarray(rng.integers(0, 40, (L, W)), jnp.int32)
+    dref, fref = stack_scan(tags, flags, init, kernel_mode="reference")
+    dpal, fpal = stack_scan(tags, flags, init, kernel_mode="pallas_interpret")
+    err = float((np.asarray(dref) != np.asarray(dpal)).mean()
+                + (np.asarray(fref) != np.asarray(fpal)).mean())
+    us = _timeit(lambda a, b, c: stack_scan(a, b, c, kernel_mode="reference")[0],
+                 tags, flags, init)
+    rows.append(["stackdist_scan", us, err])
+
     print_csv("Kernel benches", ["kernel", "us_per_call(ref/XLA)", "max_err_vs_oracle"], rows)
     save_fig("kernel_bench", {"rows": rows})
     for name, _, err in rows:
         assert err < 5e-4, (name, err)
+
+    _sweep_bench(quick)
     return []
+
+
+def _sweep_bench(quick: bool):
+    """fig4-style sweep: batched-scan reference vs the stack-distance backend
+    (plus the Pallas TPU kernel where a TPU backend is available).
+
+    Each backend runs twice and reports the second (steady-state) time so
+    one-off XLA compilation doesn't pollute the PR-over-PR trajectory.
+    Results append to BENCH_sweep.json at the repo root.
+    """
+    from repro.core import traces
+    from repro.core.sparta import TLBConfig
+    from repro.core.sweep import TLBSweepSpec, sweep_tlb
+
+    n_acc = 120_000 if quick else 1_000_000
+    tr = traces.generate("bst_external", n_ops=2 * n_acc // 5, max_accesses=n_acc)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=e, ways=4), num_partitions=p, page_shift=12)
+        for p in (1, 128) for e in (64, 128, 256, 512)
+    ]
+
+    def timed(mode):
+        best, res = None, None
+        for _ in range(2):
+            t0 = time.time()
+            res = sweep_tlb(tr.lines, specs, kernel_mode=mode)
+            best = time.time() - t0
+        return best, res
+
+    t_ref, ref = timed("reference")
+    t_sd, sd = timed("stackdist")
+    bit_identical = bool(np.array_equal(ref.hits, sd.hits))
+    entry = {
+        "written_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "n_accesses": int(tr.num_accesses),
+        "n_configs": len(specs),
+        "t_reference_s": round(t_ref, 3),
+        "t_stackdist_s": round(t_sd, 3),
+        "speedup": round(t_ref / t_sd, 2),
+        "bit_identical": bit_identical,
+    }
+    if jax.default_backend() == "tpu":
+        t_pal, pal = timed("pallas")
+        entry["t_pallas_s"] = round(t_pal, 3)
+        entry["pallas_bit_identical"] = bool(np.array_equal(ref.hits, pal.hits))
+
+    hist = {"history": []}
+    if BENCH_SWEEP_PATH.exists():
+        try:
+            prior = json.loads(BENCH_SWEEP_PATH.read_text())
+            if isinstance(prior, dict):
+                hist = prior
+        except json.JSONDecodeError:
+            pass
+    hist.setdefault("history", []).append(entry)
+    BENCH_SWEEP_PATH.write_text(json.dumps(hist, indent=1))
+
+    print_csv(
+        "Sweep engine (fig4-style, one trace, 8 configs)",
+        ["backend", "seconds", "vs_reference"],
+        [["reference(batched scan)", t_ref, 1.0],
+         ["stackdist", t_sd, t_ref / t_sd]],
+    )
+    print(f"  stackdist bit-identical to reference: {bit_identical}")
+    assert bit_identical, "stackdist sweep diverged from the batched-scan oracle"

@@ -3,8 +3,10 @@
 ``python -m benchmarks.run [--quick] [--only figN,...] [--kernel-mode MODE]``
 Prints per-figure CSVs, the checked claims, and the roofline summary table
 (if the dry-run cache exists).  ``--kernel-mode`` selects the sweep-engine
-backend (auto/reference/pallas/pallas_interpret) for the figures that run
-trace sweeps (fig4/8/9/10)."""
+backend (auto/reference/pallas/pallas_interpret/stackdist) for the figures
+that run trace sweeps (fig4/8/9/10); ``stackdist`` is the exact sort-based
+stack-distance engine, which ``auto`` already prefers for the pure-LRU TLB
+sweeps (fig4/fig8) — see EXPERIMENTS.md."""
 from __future__ import annotations
 
 import argparse
@@ -12,7 +14,7 @@ import inspect
 import sys
 import time
 
-from repro.kernels.common import VALID_MODES
+from repro.kernels.common import SWEEP_MODES
 
 
 FIGS = ("fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "kernels")
@@ -22,7 +24,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="small traces (CI mode)")
     ap.add_argument("--only", default=None, help="comma-separated figure list")
-    ap.add_argument("--kernel-mode", default="auto", choices=VALID_MODES,
+    ap.add_argument("--kernel-mode", default="auto", choices=SWEEP_MODES,
                     help="sweep-engine backend for the trace-sweep figures")
     args = ap.parse_args(argv)
 

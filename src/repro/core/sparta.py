@@ -56,7 +56,9 @@ class TLBConfig:
 
     @property
     def sets(self) -> int:
-        return max(1, self.entries // self.ways)
+        # Derive from the normalised associativity so entries < ways configs
+        # report the (1-set, fully-assoc) geometry they actually simulate as.
+        return max(1, self.entries // self.effective_ways)
 
     @property
     def effective_ways(self) -> int:

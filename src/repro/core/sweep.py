@@ -18,12 +18,24 @@ Way-padding is made invisible by *poisoning* (see
 and :func:`~repro.core.tlbsim.simulate_system`, which remain the reference
 path (tests/test_sweep.py asserts equivalence).
 
-``kernel_mode`` selects the execution backend for the TLB sweep: the batched
-Pallas TPU kernel (``repro.kernels.tlb_sim.tlb_sim_batched``, stacked VMEM
-scratch, trace blocks streamed HBM->VMEM once and shared by all configs) or
-the pure-JAX batched scan.  The joint system sweep has no Pallas kernel yet
-and always runs the batched JAX scan (the mode string is still validated so
-call sites can thread one ``kernel_mode`` everywhere).
+``kernel_mode`` selects the execution backend for the TLB sweep:
+
+* ``"stackdist"`` — the exact sort-based stack-distance engine
+  (:mod:`repro.core.stackdist`): specs are bucketed by set-mapping
+  (sets, partitions, page_shift) and ONE data-parallel depth pass per bucket
+  yields hit bits for every associativity in it — no per-element sequential
+  scan at all.  ``"auto"`` prefers this whenever every spec is a pure-LRU TLB
+  with small associativity (:data:`repro.core.stackdist.AUTO_MAX_WAYS`),
+  which is every sweep in the paper.
+* ``"pallas"`` / ``"pallas_interpret"`` — the batched sequential Pallas TPU
+  kernel (``repro.kernels.tlb_sim.tlb_sim_batched``, stacked VMEM scratch,
+  trace blocks streamed HBM->VMEM once and shared by all configs).
+* ``"reference"`` — the pure-JAX batched scan, the bit-exactness oracle.
+
+The joint system sweep is not pure-LRU (cache-hit-conditional TLB probes
+break the stack-inclusion property) and always runs the batched JAX scan;
+the mode string is still validated so call sites can thread one
+``kernel_mode`` everywhere.
 """
 from __future__ import annotations
 
@@ -35,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import stackdist
 from repro.core.sparta import TLBConfig
 from repro.core.tlbsim import (
     LINE_SHIFT,
@@ -46,7 +59,7 @@ from repro.core.tlbsim import (
     _scan_tlb_batched,
     padded_tlb_state,
 )
-from repro.kernels.common import resolve_mode
+from repro.kernels.common import SWEEP_MODES, resolve_mode
 
 __all__ = [
     "TLBSweepSpec",
@@ -110,18 +123,21 @@ class BatchedTLBResult:
 _VMEM_STATE_BUDGET_BYTES = 8 * 1024 * 1024
 
 
+def _keys_for_mapping(
+    addrs: np.ndarray, sets: int, num_partitions: int, page_shift: Optional[int]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(set, tag) streams for one set-mapping — the single address-to-key rule
+    every sweep backend shares (bit-identity depends on it)."""
+    vpns = addrs if page_shift is None else addrs >> (page_shift - LINE_SHIFT)
+    return _prepare_keys(vpns, sets, num_partitions)
+
+
 def _sweep_keys(
     addrs: np.ndarray, specs: Sequence[TLBSweepSpec]
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Stacked [B, N] (set, tag) streams, one row per spec."""
-    set_rows, tag_rows = [], []
-    for sp in specs:
-        vpns = addrs if sp.page_shift is None else addrs >> (sp.page_shift - LINE_SHIFT)
-        sets, _ = _geom(sp.cfg)
-        s, t = _prepare_keys(vpns, sets, sp.num_partitions)
-        set_rows.append(s)
-        tag_rows.append(t)
-    return np.stack(set_rows), np.stack(tag_rows)
+    rows = [_keys_for_mapping(addrs, *_mapping_key(sp)) for sp in specs]
+    return np.stack([r[0] for r in rows]), np.stack([r[1] for r in rows])
 
 
 def sweep_tlb(
@@ -147,7 +163,15 @@ def sweep_tlb(
             "sweep_tlb batch mixes page_shift=None (VPN-stream) specs with "
             "page_shift-set (line-stream) specs; one input stream cannot be both"
         )
-    mode = resolve_mode(kernel_mode)
+    mode = resolve_mode(
+        kernel_mode,
+        valid=SWEEP_MODES,
+        prefer="stackdist" if _stackdist_eligible(specs) else None,
+    )
+    if mode == "stackdist":
+        hits = _sweep_tlb_stackdist(addrs, specs)
+        n0 = int(hits.shape[1] * warmup_frac)
+        return BatchedTLBResult(hits=hits, n_warm=hits.shape[1] - n0)
     set_b, tag_b = _sweep_keys(addrs, specs)
     geoms = [sp.geometry for sp in specs]
     total_sets = max(g[0] for g in geoms)
@@ -213,6 +237,46 @@ def _vmem_chunks(geoms: Sequence[Tuple[int, int]], *, block: int = 512) -> list:
         cur_sets, cur_ways = sets, w
     chunks.append(cur)
     return chunks
+
+
+# ---------------------------------------------------------------------------
+# Stack-distance backend: bucket specs by set-mapping, one depth pass each.
+# ---------------------------------------------------------------------------
+
+def _mapping_key(sp: TLBSweepSpec) -> Tuple[int, int, Optional[int]]:
+    """The (set, tag) stream of a spec depends only on this triple — specs
+    differing only in associativity share one stack-depth pass."""
+    sets, _ = _geom(sp.cfg)
+    return sets, sp.num_partitions, sp.page_shift
+
+
+def _stackdist_eligible(specs: Sequence[TLBSweepSpec]) -> bool:
+    """Every TLBSweepSpec is a pure-LRU TLB today, so eligibility reduces to
+    the associativity staying small enough for the capped-stack state."""
+    return max(sp.cfg.effective_ways for sp in specs) <= stackdist.AUTO_MAX_WAYS
+
+
+def _sweep_tlb_stackdist(addrs: np.ndarray, specs: Sequence[TLBSweepSpec]) -> np.ndarray:
+    """Hit bits [B, N] via one stack-depth pass per distinct set-mapping.
+
+    Keys are prepared once per *mapping* (not per spec), every mapping's
+    depth pass runs data-parallel (no per-element sequential scan), and each
+    spec reads its hit bits off its bucket's depths at its own associativity.
+    """
+    keys = [_mapping_key(sp) for sp in specs]
+    uniq = list(dict.fromkeys(keys))
+    rows = [_keys_for_mapping(addrs, *k) for k in uniq]
+    set_rows = [r[0] for r in rows]
+    tag_rows = [r[1] for r in rows]
+    cap = max(sp.cfg.effective_ways for sp in specs)
+    depth = stackdist.stack_depths_batched(
+        np.stack(set_rows), np.stack(tag_rows), cap=cap
+    )
+    bucket = {k: i for i, k in enumerate(uniq)}
+    return np.stack([
+        stackdist.hits_from_depths(depth[bucket[k]], sp.cfg.effective_ways)
+        for k, sp in zip(keys, specs)
+    ])
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +398,10 @@ def sweep_system(
     """
     if not cfgs:
         raise ValueError("sweep_system needs at least one config")
-    resolve_mode(kernel_mode)  # validated; the joint sweep is JAX-only so far
+    # Validated so call sites can thread one kernel_mode everywhere; the joint
+    # pipeline always runs the batched JAX scan ("stackdist" does not apply:
+    # cache-hit-conditional TLB probes break the LRU stack-inclusion property).
+    resolve_mode(kernel_mode, valid=SWEEP_MODES)
 
     streams = [np.stack(rows) for rows in zip(*(_system_keys(lines, c) for c in cfgs))]
 

@@ -168,8 +168,7 @@ def simulate_tlb(
     Each partition TLB has ``cfg.entries`` entries (the paper compares equal
     *per-TLB* sizes; total entries = P * entries for SPARTA).
     """
-    ways = cfg.effective_ways
-    sets = max(1, cfg.entries // ways)
+    sets, ways = _geom(cfg)
     set_idx, tag = _prepare_keys(vpns, sets, num_partitions)
     hits = np.asarray(_scan_tlb(jnp.asarray(set_idx), jnp.asarray(tag), sets * num_partitions, ways))
     return TLBResult.from_hits(hits, warmup_frac)
@@ -256,10 +255,14 @@ class SystemEvents(NamedTuple):
 
 
 def _geom(cfg: Optional[TLBConfig]) -> Tuple[int, int]:
+    """(sets, ways) of a structure; absent structures degrade to 1x1.
+
+    The single source of geometry truth is :class:`TLBConfig` itself
+    (``sets`` / ``effective_ways`` — including the entries < ways
+    normalisation); every simulator and sweep derives through here."""
     if cfg is None:
         return 1, 1
-    w = cfg.effective_ways
-    return max(1, cfg.entries // w), w
+    return cfg.sets, cfg.effective_ways
 
 
 @functools.partial(
@@ -380,10 +383,13 @@ def miss_ratio_curve(
     page_shift: int = 12,
     kernel_mode: str = "auto",
 ) -> "np.ndarray":
-    """Miss ratio at each TLB size, via the batched sweep engine: the trace is
-    scanned ONCE for all sizes (state padded to the largest geometry), not once
-    per size.  ``repro.core.sweep`` holds the engine; :func:`simulate_tlb`
-    remains the single-config oracle path."""
+    """Miss ratio at each TLB size, via the batched sweep engine: under the
+    default ``kernel_mode="auto"`` the exact stack-distance backend
+    (``kernel_mode="stackdist"``, :mod:`repro.core.stackdist`) computes every
+    size's hit bits from data-parallel depth passes — no per-element scan;
+    other modes stream the trace once for all sizes through the batched scan
+    or Pallas kernel.  ``repro.core.sweep`` holds the engine;
+    :func:`simulate_tlb` remains the single-config oracle path."""
     from repro.core import sweep  # local import: sweep builds on this module
 
     specs = [

@@ -139,7 +139,6 @@ def _gen_hash_table(rng: np.random.Generator, n_ops: int, footprint_lines: int,
     chain = chain.copy()
     cols = np.arange(max_chain)[None, :]
     keep = cols < np.maximum(chain, 1)[:, None]
-    out: List[np.ndarray] = []
     # Interleave bucket probe then its chain probes, preserving per-op order.
     seq = np.concatenate([buckets[:, None], np.where(keep, node_probe, -1)], axis=1).ravel()
     return seq[seq >= 0]
@@ -276,7 +275,6 @@ def _gen_rocksdb(rng: np.random.Generator, n_ops: int, footprint_lines: int) -> 
     # Scatter popular ranks over the physical block space.
     blocks = _scatter(blocks, n_blocks, salt=3)
 
-    ev: List[np.ndarray] = []
     # memtable probe: ~4 scattered lines in the memtable region
     mt = _scatter(rng.integers(0, 1 << 40, size=(n_ops, 4), dtype=np.int64).ravel(), mem_lines, salt=5)
     # index probe: 1 line
@@ -288,13 +286,32 @@ def _gen_rocksdb(rng: np.random.Generator, n_ops: int, footprint_lines: int) -> 
                     mt.reshape(n_ops, 4)[:, 2], mt.reshape(n_ops, 4)[:, 3],
                     ix, d0, d0 + 1], axis=1).ravel()
 
-    # 5% of ops are 32-line sequential scans appended at random positions.
+    # 5% of ops are 32-line sequential range scans, each burst inserted at a
+    # random position in the point-lookup stream (range reads arrive
+    # interleaved with gets in a real server, not as one tail batch).
     n_scan = n_ops // 20
     scan_start = data_base + rng.integers(0, max(data_lines - 32, 1), size=n_scan, dtype=np.int64)
-    scans = (scan_start[:, None] + np.arange(32)[None, :]).ravel()
-    out = np.concatenate([seq, scans])
-    # Shuffle scan placement coarsely by rolling (keeps per-op order intact
-    # for the dominant point-lookup stream).
+    scans = scan_start[:, None] + np.arange(32)[None, :]
+    return _interleave_bursts(seq, scans, rng)
+
+
+def _interleave_bursts(stream: np.ndarray, bursts: np.ndarray,
+                       rng: np.random.Generator) -> np.ndarray:
+    """Insert each burst row (kept contiguous, in row order) at a uniformly
+    random position of ``stream``, preserving the stream's own order."""
+    n_b, blen = bursts.shape
+    n = stream.shape[0]
+    if n_b == 0:
+        return stream
+    ip = np.sort(rng.integers(0, n + 1, size=n_b))
+    out = np.empty(n + n_b * blen, stream.dtype)
+    # Stream element j shifts right by one burst length per burst inserted at
+    # or before it; burst k starts at its insertion point plus the k bursts
+    # already inserted to its left.
+    shift = np.searchsorted(ip, np.arange(n), side="right")
+    out[np.arange(n) + blen * shift] = stream
+    burst_pos = (ip + blen * np.arange(n_b))[:, None] + np.arange(blen)
+    out[burst_pos] = bursts
     return out
 
 

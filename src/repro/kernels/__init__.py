@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernel packages: flash_attention, paged_attention, rwkv6_scan,
+# mamba2_scan, tlb_sim (sequential trace-sim scans), stackdist
+# (segmented LRU-stack scan powering the sort-based sweep backend).
+# Mode dispatch helpers live in common.py.

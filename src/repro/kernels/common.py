@@ -11,18 +11,41 @@ Every kernel package exposes ``ops.py`` with a public op that takes
                            interpreter on CPU; used by the test suite to
                            validate kernels against the oracle.
 * ``"auto"``             — ``pallas`` on TPU backends, else ``reference``.
+
+The trace-sweep engine (:mod:`repro.core.sweep`) accepts one extra mode on
+top of the generic four: ``"stackdist"``, the exact sort-based
+stack-distance backend (:mod:`repro.core.stackdist`).  Sweep entry points
+validate against :data:`SWEEP_MODES` and pass ``prefer="stackdist"`` so that
+``"auto"`` picks it whenever every spec is a pure-LRU TLB it can serve —
+per-op kernels keep the plain four-mode registry.
 """
 from __future__ import annotations
+
+from typing import Optional, Sequence
 
 import jax
 
 VALID_MODES = ("auto", "reference", "pallas", "pallas_interpret")
+SWEEP_MODES = VALID_MODES + ("stackdist",)
 
 
-def resolve_mode(kernel_mode: str) -> str:
-    if kernel_mode not in VALID_MODES:
-        raise ValueError(f"kernel_mode={kernel_mode!r}; expected one of {VALID_MODES}")
+def resolve_mode(
+    kernel_mode: str,
+    *,
+    valid: Sequence[str] = VALID_MODES,
+    prefer: Optional[str] = None,
+) -> str:
+    """Validate ``kernel_mode`` against ``valid`` and resolve ``"auto"``.
+
+    ``prefer`` names the backend ``"auto"`` should pick when the caller knows
+    a better-than-default one applies (e.g. the sweep engine preferring
+    ``"stackdist"``); explicit modes are always honoured as given.
+    """
+    if kernel_mode not in valid:
+        raise ValueError(f"kernel_mode={kernel_mode!r}; expected one of {tuple(valid)}")
     if kernel_mode == "auto":
+        if prefer is not None:
+            return prefer
         return "pallas" if jax.default_backend() == "tpu" else "reference"
     return kernel_mode
 

@@ -1,0 +1,3 @@
+from repro.kernels.stackdist.ops import stack_scan
+
+__all__ = ["stack_scan"]

@@ -1,0 +1,83 @@
+"""Segmented LRU-stack scan as a Pallas TPU kernel.
+
+TPU port of the stack-distance engine's hot loop (:mod:`repro.core.stackdist`):
+``L`` lanes each advance a capped LRU stack — the W most-recently-used
+distinct tags of the current set segment — through ``C`` in-lane accesses.
+The stacked per-lane state ([L, W], a few hundred KB) lives in **VMEM
+scratch** for the whole walk: TPU grids execute sequentially, so scratch
+persists across grid steps while each step streams one access *column*
+([L, 1]) HBM->VMEM.  The per-step update is a W-wide vector compare/rotate
+per lane — VPU-friendly, no gathers, no sorts.
+
+This is the same role the batched ``tlb_sim`` kernel plays for the scan
+backend, but the sequential grid is only ``C`` long (the lane dimension
+carries the parallelism), not one step per trace element.
+
+Host-side oracle: :func:`repro.kernels.stackdist.ref.stack_scan_ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# The per-access update is shared with the reference backend (pure jnp, so it
+# lowers in both): one definition keeps the two paths bit-identical forever.
+from repro.kernels.stackdist.ref import lru_stack_step
+
+
+def _stack_scan_kernel(
+    init_ref,                 # int32 [L, W] initial (carry-in) stacks
+    tag_ref, flag_ref,        # int32 [L, 1] current access column
+    depth_ref,                # int32 [L, 1] output column
+    final_ref,                # int32 [L, W] final stacks (last write wins)
+    stack_scr,                # int32 [L, W] persistent VMEM state
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        stack_scr[...] = init_ref[...]
+
+    new, depth = lru_stack_step(stack_scr[...], tag_ref[:, 0], flag_ref[:, 0] != 0)
+    stack_scr[...] = new
+    depth_ref[:, 0] = depth
+    final_ref[...] = new
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def stack_scan_pallas(
+    tags: jnp.ndarray,        # int32 [L, C]
+    seg_flags: jnp.ndarray,   # bool  [L, C]
+    init_stack: jnp.ndarray,  # int32 [L, W]
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (depths int32 [L, C], final stacks int32 [L, W])."""
+    L, C = tags.shape
+    W = init_stack.shape[-1]
+    depths, final = pl.pallas_call(
+        _stack_scan_kernel,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((L, W), lambda i: (0, 0)),
+            pl.BlockSpec((L, 1), lambda i: (0, i)),
+            pl.BlockSpec((L, 1), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((L, 1), lambda i: (0, i)),
+            pl.BlockSpec((L, W), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((L, C), jnp.int32),
+            jax.ShapeDtypeStruct((L, W), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((L, W), jnp.int32)],
+        interpret=interpret,
+    )(init_stack.astype(jnp.int32), tags.astype(jnp.int32),
+      seg_flags.astype(jnp.int32))
+    return depths, final

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the segmented LRU-stack scan kernel.
+
+The stack-distance engine (:mod:`repro.core.stackdist`) reshapes a set-sorted
+access stream into ``L`` independent lanes of ``C`` accesses and walks all
+lanes in lock-step: one :func:`lru_stack_step` per in-lane position, ``C``
+sequential steps total instead of one per trace element.  Each lane carries a
+capped LRU stack — the ``W`` most-recently-used distinct tags of the current
+set segment, MRU first, ``-1`` = empty — and every access reports its 0-based
+depth in the pre-access stack (``-1`` = absent: cold, or distance >= W).
+
+``seg_flag`` marks set-segment starts; the stack resets there, which is what
+makes one lane able to host many (short) per-set segments back to back.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lru_stack_step(
+    stack: jnp.ndarray,      # int32 [..., W] MRU-first, -1 = empty
+    tag: jnp.ndarray,        # int32 [...]
+    seg_start: jnp.ndarray,  # bool  [...]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Advance capped LRU stacks by one access per lane.
+
+    Returns ``(new_stack, depth)``.  The update is exact for any ways <= W:
+    the capped stack always equals the first W entries of the uncapped LRU
+    stack (recency only ever deepens, so truncated entries never resurface).
+    """
+    W = stack.shape[-1]
+    stack = jnp.where(seg_start[..., None], -1, stack)
+    eq = stack == tag[..., None]
+    found = jnp.any(eq, axis=-1)
+    depth = jnp.where(found, jnp.argmax(eq, axis=-1).astype(jnp.int32), -1)
+    # Move the tag to the front: rotate slots [0, idx] right by one, where idx
+    # is the tag's slot on a hit and the last slot (LRU eviction) on a miss.
+    idx = jnp.where(found, depth, W - 1)
+    shifted = jnp.concatenate([tag[..., None], stack[..., :-1]], axis=-1)
+    way_ix = jax.lax.broadcasted_iota(jnp.int32, stack.shape, stack.ndim - 1)
+    new = jnp.where(way_ix <= idx[..., None], shifted, stack)
+    return new, depth
+
+
+@jax.jit
+def stack_scan_ref(
+    tags: jnp.ndarray,        # int32 [L, C]
+    seg_flags: jnp.ndarray,   # bool  [L, C]
+    init_stack: jnp.ndarray,  # int32 [L, W]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Walk C accesses per lane.  Returns (depths int32 [L, C], final [L, W])."""
+
+    def step(stack, inp):
+        t, f = inp
+        new, depth = lru_stack_step(stack, t, f)
+        return new, depth
+
+    final, depths = jax.lax.scan(step, init_stack, (tags.T, seg_flags.T))
+    return depths.T, final

@@ -1,0 +1,267 @@
+"""Oracle-equivalence for the stack-distance engine (repro.core.stackdist).
+
+The sequential simulators remain the bit-exactness reference: stackdist hit
+bits must match ``simulate_tlb`` exactly across random geometries (including
+entries < ways degenerates), partition counts, and both page shifts; exact
+distances must match a brute-force distinct-count; and the grouping layer in
+``repro.core.sweep`` must collapse a sweep to one depth pass per distinct
+set-mapping.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.core import stackdist, sweep, tlbsim, traces
+from repro.core.sparta import TLBConfig
+from repro.core.stackdist import (
+    STACKDIST_INF,
+    hits_from_depths,
+    prev_occurrence,
+    reuse_distances,
+    stack_depths,
+)
+from repro.core.sweep import TLBSweepSpec, sweep_tlb
+from repro.core.tlbsim import _prepare_keys, simulate_tlb
+
+PARTITIONS = (1, 4, 32)
+PAGE_SHIFTS = (12, 21)
+
+
+def _random_lines(seed: int, n: int = 1500, span_pages: int = 3000) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, span_pages, n).astype(np.int64)
+    return (pages << (12 - tlbsim.LINE_SHIFT)) + rng.integers(0, 64, n)
+
+
+def _brute_distances(set_idx, tag):
+    """Reference stack distances via explicit per-set MRU lists."""
+    stacks = {}
+    out = np.empty(set_idx.shape[0], np.int64)
+    for i, (s, t) in enumerate(zip(set_idx.tolist(), tag.tolist())):
+        st_ = stacks.setdefault(s, [])
+        out[i] = st_.index(t) if t in st_ else -1
+        if t in st_:
+            st_.remove(t)
+        st_.insert(0, t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# sweep_tlb(kernel_mode="stackdist") vs simulate_tlb, property grid.
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 10_000), st.sampled_from(PARTITIONS), st.sampled_from(PAGE_SHIFTS))
+def test_stackdist_sweep_bitexact_vs_oracle(seed, P, shift):
+    lines = _random_lines(seed)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=2, ways=4), num_partitions=P, page_shift=shift),
+        TLBSweepSpec(TLBConfig(entries=16, ways=2), num_partitions=P, page_shift=shift),
+        TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=1, page_shift=shift),
+        TLBSweepSpec(TLBConfig(entries=128, ways=8), num_partitions=P, page_shift=shift),
+        TLBSweepSpec(TLBConfig(entries=1, ways=1), num_partitions=P, page_shift=shift),
+    ]
+    res = sweep_tlb(lines, specs, kernel_mode="stackdist")
+    assert res.hits.shape == (len(specs), lines.shape[0])
+    for i, sp in enumerate(specs):
+        vpns = lines >> (shift - tlbsim.LINE_SHIFT)
+        ref = simulate_tlb(vpns, sp.cfg, num_partitions=sp.num_partitions)
+        np.testing.assert_array_equal(res.hits[i], ref.hits)
+        assert res[i].miss_ratio == ref.miss_ratio
+
+
+def test_auto_mode_uses_stackdist_for_pure_lru_sweeps(monkeypatch):
+    """On a pure-LRU small-ways sweep, auto must route to the stack-distance
+    backend — never the sequential scans."""
+    monkeypatch.setattr(
+        sweep, "_scan_tlb_batched",
+        lambda *a, **k: pytest.fail("sequential batched scan used under auto"),
+    )
+    monkeypatch.setattr(
+        tlbsim, "_scan_tlb",
+        lambda *a, **k: pytest.fail("per-config scan used under auto"),
+    )
+    vpns = np.random.default_rng(3).integers(0, 4000, 1200).astype(np.int64)
+    specs = [
+        TLBSweepSpec(TLBConfig(entries=e, ways=4), num_partitions=p)
+        for e in (16, 64) for p in (1, 4)
+    ]
+    res = sweep_tlb(vpns, specs)  # kernel_mode="auto"
+    assert res.hits.shape == (len(specs), vpns.shape[0])
+
+
+def test_auto_mode_falls_back_for_huge_associativity(monkeypatch):
+    """ways beyond AUTO_MAX_WAYS must not pick the capped-stack engine."""
+    monkeypatch.setattr(
+        stackdist, "stack_depths_batched",
+        lambda *a, **k: pytest.fail("stackdist used for huge associativity"),
+    )
+    vpns = np.random.default_rng(5).integers(0, 2000, 600).astype(np.int64)
+    specs = [TLBSweepSpec(TLBConfig(entries=1024, ways=64))]
+    res = sweep_tlb(vpns, specs)  # auto -> reference scan
+    ref = simulate_tlb(vpns, specs[0].cfg)
+    np.testing.assert_array_equal(res.hits[0], ref.hits)
+
+
+def test_grouping_one_pass_per_set_mapping(monkeypatch):
+    """A fig4-style sweep collapses to ONE batched depth pass whose group
+    count equals the number of distinct (sets, partitions, page_shift)
+    mappings — specs differing only in associativity share a pass."""
+    calls = []
+    real = stackdist.stack_depths_batched
+
+    def counting(set_b, tag_b, **kw):
+        calls.append(set_b.shape[0])
+        return real(set_b, tag_b, **kw)
+
+    monkeypatch.setattr(stackdist, "stack_depths_batched", counting)
+    vpns = np.random.default_rng(7).integers(0, 5000, 1000).astype(np.int64)
+    specs = [
+        # 3 sizes x 2 partition counts at ways=4, plus two ways-variants that
+        # share the (sets=16, P) mappings of the entries=64 specs.
+        *(TLBSweepSpec(TLBConfig(entries=e, ways=4), num_partitions=p)
+          for e in (16, 64, 256) for p in (1, 4)),
+        TLBSweepSpec(TLBConfig(entries=128, ways=8), num_partitions=1),  # sets=16
+        TLBSweepSpec(TLBConfig(entries=32, ways=2), num_partitions=4),   # sets=16
+    ]
+    n_mappings = len({sweep._mapping_key(sp) for sp in specs})
+    assert n_mappings == 6  # the ways-variants dedup onto existing mappings
+    res = sweep_tlb(vpns, specs, kernel_mode="stackdist")
+    assert calls == [n_mappings]
+    for i, sp in enumerate(specs):
+        ref = simulate_tlb(vpns, sp.cfg, num_partitions=sp.num_partitions)
+        np.testing.assert_array_equal(res.hits[i], ref.hits)
+
+
+# ---------------------------------------------------------------------------
+# Distances: exactness, infinity semantics, kernel paths.
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(0, 10_000), st.sampled_from((1, 3, 16)))
+def test_reuse_distances_match_bruteforce(seed, total_sets):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, 300, 800)
+    set_idx = (keys % total_sets).astype(np.int64)
+    tag = (keys // total_sets).astype(np.int64)
+    cap = 8
+    d = reuse_distances(set_idx, tag, cap=cap)
+    ref = _brute_distances(set_idx, tag)
+    exact = (ref >= 0) & (ref < cap)
+    np.testing.assert_array_equal(d[exact], ref[exact])
+    # Cold accesses are at infinite distance; deep reuses clip to the cap.
+    cold = prev_occurrence(set_idx, tag) < 0
+    assert (d[cold] == STACKDIST_INF).all()
+    clipped = ~cold & ~exact
+    assert (d[clipped] == cap).all()
+
+
+def test_infinite_distance_iff_reuse():
+    rng = np.random.default_rng(11)
+    keys = rng.integers(0, 900, 2000)
+    set_idx = (keys % 8).astype(np.int64)
+    tag = (keys // 8).astype(np.int64)
+    d = reuse_distances(set_idx, tag, cap=4)
+    prev = prev_occurrence(set_idx, tag)
+    np.testing.assert_array_equal(d < STACKDIST_INF, prev >= 0)
+    # An effectively infinite TLB (cap above every set's distinct-tag count)
+    # hits exactly on reuses.
+    max_distinct = max(len(set(tag[set_idx == s])) for s in range(8))
+    assert max_distinct < 256
+    depth = stack_depths(set_idx, tag, cap=256)
+    np.testing.assert_array_equal(hits_from_depths(depth, 256), prev >= 0)
+
+
+def test_stack_depths_pallas_interpret_matches_reference():
+    """The Pallas kernel path (interpreter on CPU) is bit-identical through
+    both phases — empty-init lane walk and carry-in re-walk."""
+    rng = np.random.default_rng(13)
+    keys = rng.integers(0, 500, 700)
+    set_idx = (keys % 4).astype(np.int64)
+    tag = (keys // 4).astype(np.int64)
+    ref = stack_depths(set_idx, tag, cap=4, kernel_mode="reference", block=64)
+    pal = stack_depths(set_idx, tag, cap=4, kernel_mode="pallas_interpret", block=64)
+    np.testing.assert_array_equal(ref, pal)
+
+
+def test_degenerate_shapes():
+    # shorter than one lane block; single access; all-same tag
+    one = stack_depths(np.zeros(1, np.int64), np.zeros(1, np.int64), cap=2)
+    np.testing.assert_array_equal(one, [-1])
+    same = stack_depths(np.zeros(5, np.int64), np.full(5, 7, np.int64), cap=2)
+    np.testing.assert_array_equal(same, [-1, 0, 0, 0, 0])
+    d = reuse_distances(np.zeros(0, np.int64), np.zeros(0, np.int64), cap=2)
+    assert d.shape == (0,)
+
+
+def test_cap_validation():
+    with pytest.raises(ValueError, match="cap"):
+        stack_depths(np.zeros(4, np.int64), np.zeros(4, np.int64), cap=0)
+    with pytest.raises(ValueError, match="MAX_CAP"):
+        stack_depths(np.zeros(4, np.int64), np.zeros(4, np.int64), cap=100_000)
+
+
+def test_tag_range_validation():
+    """Tags that would alias on the int32 cast (or collide with the -1/-2
+    stack sentinels) must raise, not silently corrupt distances."""
+    sets = np.zeros(2, np.int64)
+    with pytest.raises(ValueError, match="int32"):
+        stack_depths(sets, np.array([2**31 + 5, 2**31 + 5 + 2**32]), cap=4)
+    with pytest.raises(ValueError, match="int32"):
+        stack_depths(sets, np.array([-1, 3]), cap=4)
+
+
+def test_mode_registry():
+    """stackdist is a sweep-level mode: sweeps accept it, per-op kernels don't."""
+    vpns = np.zeros(16, np.int64)
+    specs = [TLBSweepSpec(TLBConfig(entries=8, ways=4))]
+    res = sweep_tlb(vpns, specs, kernel_mode="stackdist")
+    assert res.hits.shape == (1, 16)
+    with pytest.raises(ValueError, match="kernel_mode"):
+        sweep_tlb(vpns, specs, kernel_mode="bogus")
+    from repro.kernels.tlb_sim import tlb_sim
+    with pytest.raises(ValueError, match="kernel_mode"):
+        tlb_sim(np.zeros(4, np.int32), np.zeros(4, np.int32), 4, 2,
+                kernel_mode="stackdist")
+    # The joint system sweep validates-and-ignores it (not pure-LRU).
+    lines = np.random.default_rng(0).integers(0, 1 << 20, 500).astype(np.int64)
+    from repro.core.sweep import sweep_system
+    from repro.core.tlbsim import SystemSimConfig
+    a = sweep_system(lines, [SystemSimConfig()], kernel_mode="stackdist")
+    b = sweep_system(lines, [SystemSimConfig()], kernel_mode="reference")
+    np.testing.assert_array_equal(a.mem_tlb_hit, b.mem_tlb_hit)
+
+
+# ---------------------------------------------------------------------------
+# Trace-generator regression (rocksdb scan interleaving).
+# ---------------------------------------------------------------------------
+
+def test_rocksdb_scans_interleaved_not_appended():
+    tr = traces.generate("rocksdb", n_ops=4000, footprint_bytes=1 << 30)
+    n_point = 4000 * 7
+    n_scan_lines = (4000 // 20) * 32
+    assert tr.num_accesses == n_point + n_scan_lines
+    # Scan bursts are 32 consecutive line addresses; if they were appended at
+    # the tail, all +1-strided runs would live in the last n_scan_lines
+    # accesses.  Interleaving must place some in the first half.
+    diffs = np.diff(tr.lines[: tr.num_accesses // 2])
+    run = 0
+    longest = 0
+    for d in diffs:
+        run = run + 1 if d == 1 else 0
+        longest = max(longest, run)
+    assert longest >= 16, "no scan burst found in the first half of the trace"
+
+
+def test_interleave_bursts_is_a_riffle():
+    rng = np.random.default_rng(3)
+    stream = np.arange(100, dtype=np.int64)
+    bursts = 1000 + np.arange(12, dtype=np.int64).reshape(3, 4)
+    out = traces._interleave_bursts(stream, bursts, rng)
+    assert out.shape[0] == 112
+    # stream order preserved
+    np.testing.assert_array_equal(out[out < 1000], stream)
+    # each burst stays contiguous and in row order
+    starts = np.flatnonzero(np.isin(out, bursts[:, 0]))
+    for k, s in enumerate(sorted(starts.tolist())):
+        np.testing.assert_array_equal(out[s:s + 4], bursts[k])
