@@ -1,6 +1,9 @@
 """Fig 5: thread contention on shared memory-side TLBs.
 
 Miss rate vs (threads x partitions) with 128-entry 4-way TLBs per partition.
+Each interleaved thread trace is streamed ONCE for all partition counts via
+the batched sweep engine (``sweep.sweep_tlb``; bit-identical to the
+per-config ``tlbsim.miss_ratio`` oracle it replaced).
 Claims (C3): contention on a single shared TLB grows with threads, but
 partitioning makes it vanish; (16 partitions, 16 threads) beats
 (1 partition, 1 thread) at equal aggregate entries/thread."""
@@ -9,28 +12,28 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Claim, W4, print_csv, save_fig
-from repro.core import tlbsim, traces
+from repro.core import traces
 from repro.core.sparta import TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_tlb
 
 THREADS = (1, 2, 4, 8, 16)
 PARTS = (1, 4, 16, 64)
 TLB = TLBConfig(entries=128, ways=4)
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, kernel_mode: str = "auto"):
     n_ops = 4_000 if quick else 12_000
+    specs = [TLBSweepSpec(TLB, num_partitions=p, page_shift=12) for p in PARTS]
     results = {}
-    rows = []
     for w in W4:
-        for p in PARTS:
-            line = []
-            for t in THREADS:
-                streams = traces.thread_traces(w, t, n_ops=n_ops, seed=7)
-                inter = traces.interleave(streams)[:1_200_000]
-                vpns = inter >> (12 - 6)
-                line.append(tlbsim.miss_ratio(vpns, TLB.entries, num_partitions=p))
-            results[f"{w}/P{p}"] = line
-            rows.append([w, p] + line)
+        grid = np.empty((len(PARTS), len(THREADS)))
+        for i_t, t in enumerate(THREADS):
+            streams = traces.thread_traces(w, t, n_ops=n_ops, seed=7)
+            inter = traces.interleave(streams)[:1_200_000]
+            grid[:, i_t] = sweep_tlb(inter, specs, kernel_mode=kernel_mode).miss_ratios
+        for i_p, p in enumerate(PARTS):
+            results[f"{w}/P{p}"] = [float(x) for x in grid[i_p]]
+    rows = [[w, p] + results[f"{w}/P{p}"] for w in W4 for p in PARTS]
 
     # C3a: contention on 1 partition (16 threads vs 1 thread miss increase).
     bumps = [results[f"{w}/P1"][-1] - results[f"{w}/P1"][0] for w in W4]

@@ -5,9 +5,10 @@ On this CPU container the timing column measures the *reference* (XLA) path
 of TPU performance); the allclose column is the correctness deliverable.
 
 The sweep-engine section times the batched-scan reference against the exact
-stack-distance backend on a fig4-style sweep and appends the result to
-``BENCH_sweep.json`` at the repo root, so the perf trajectory is tracked
-PR-over-PR.
+stack-distance backend on a fig4-style sweep; the timeline section times the
+Pallas queueing kernel against its ``lax.scan`` reference on a fig11-style
+contended run.  Both append their result to ``BENCH_sweep.json`` at the repo
+root, so the perf trajectory is tracked PR-over-PR.
 """
 from __future__ import annotations
 
@@ -119,13 +120,51 @@ def run(quick: bool = False):
                  tags, flags, init)
     rows.append(["stackdist_scan", us, err])
 
+    # timeline queueing scan
+    from repro.kernels.timeline import TimelineParams, timeline_sim
+    n = 4096
+    tp = TimelineParams(mem_tlb=True, num_accels=4, mshrs=4,
+                        num_partitions=8, tlb_ports=2, dram_banks=8)
+    tl_inputs = (
+        jnp.asarray(rng.integers(0, tp.num_accels, n), jnp.int32),
+        jnp.asarray(rng.integers(0, tp.num_partitions, n), jnp.int32),
+        jnp.asarray(rng.integers(0, tp.dram_banks, n), jnp.int32),
+        jnp.asarray(rng.integers(0, tp.dram_banks, n), jnp.int32),
+        jnp.asarray(rng.random(n) < 0.5, jnp.int32),
+        jnp.asarray(rng.random(n) < 0.6, jnp.int32),
+        jnp.asarray(rng.random(n) < 0.7, jnp.int32),
+        jnp.zeros(n, jnp.float32),
+    )
+    ref = timeline_sim(*tl_inputs, tp, kernel_mode="reference")
+    pal = timeline_sim(*tl_inputs, tp, block=512, kernel_mode="pallas_interpret")
+    err = float(sum((np.asarray(r) != np.asarray(p)).mean()
+                    for r, p in zip(ref, pal)))
+    us = _timeit(lambda *a: timeline_sim(*a, tp, kernel_mode="reference")[0],
+                 *tl_inputs)
+    rows.append(["timeline_sim", us, err])
+
     print_csv("Kernel benches", ["kernel", "us_per_call(ref/XLA)", "max_err_vs_oracle"], rows)
     save_fig("kernel_bench", {"rows": rows})
     for name, _, err in rows:
         assert err < 5e-4, (name, err)
 
     _sweep_bench(quick)
+    _timeline_bench(quick)
     return []
+
+
+def _append_bench_entry(entry: dict) -> None:
+    """Append one record to the BENCH_sweep.json history at the repo root."""
+    hist = {"history": []}
+    if BENCH_SWEEP_PATH.exists():
+        try:
+            prior = json.loads(BENCH_SWEEP_PATH.read_text())
+            if isinstance(prior, dict):
+                hist = prior
+        except json.JSONDecodeError:
+            pass
+    hist.setdefault("history", []).append(entry)
+    BENCH_SWEEP_PATH.write_text(json.dumps(hist, indent=1))
 
 
 def _sweep_bench(quick: bool):
@@ -174,16 +213,7 @@ def _sweep_bench(quick: bool):
         entry["t_pallas_s"] = round(t_pal, 3)
         entry["pallas_bit_identical"] = bool(np.array_equal(ref.hits, pal.hits))
 
-    hist = {"history": []}
-    if BENCH_SWEEP_PATH.exists():
-        try:
-            prior = json.loads(BENCH_SWEEP_PATH.read_text())
-            if isinstance(prior, dict):
-                hist = prior
-        except json.JSONDecodeError:
-            pass
-    hist.setdefault("history", []).append(entry)
-    BENCH_SWEEP_PATH.write_text(json.dumps(hist, indent=1))
+    _append_bench_entry(entry)
 
     print_csv(
         "Sweep engine (fig4-style, one trace, 8 configs)",
@@ -193,3 +223,69 @@ def _sweep_bench(quick: bool):
     )
     print(f"  stackdist bit-identical to reference: {bit_identical}")
     assert bit_identical, "stackdist sweep diverged from the batched-scan oracle"
+
+
+def _timeline_bench(quick: bool):
+    """fig11-style timeline run: the Pallas queueing kernel vs its jnp
+    ``lax.scan`` reference, appended to BENCH_sweep.json.
+
+    On this CPU container the Pallas path runs under the interpreter (the
+    ``mode`` field records which); on a TPU backend the same entry captures
+    the compiled-kernel speedup.  Bit-identity is asserted either way — the
+    two paths share one ``timeline_step``.
+    """
+    from repro.core import timeline, traces
+    from repro.core.sparta import SystemLatencies, TLBConfig
+    from repro.core.sweep import sweep_system
+    from repro.core.tlbsim import SystemSimConfig
+
+    n_acc = 30_000 if quick else 120_000
+    streams = traces.thread_traces("bst_external", 4, n_ops=2 * n_acc // 20, seed=7)
+    inter = traces.interleave(streams)[:n_acc]
+    ev = sweep_system(inter, [SystemSimConfig(
+        cache=TLBConfig(entries=256, ways=4), accel_tlb=None,
+        mem_tlb=TLBConfig(entries=128, ways=4), num_partitions=32,
+        page_shift=12)])[0]
+    lat = SystemLatencies()
+    kw = dict(cfg=timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16),
+              num_partitions=32, num_accelerators=4)
+
+    pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+
+    def timed(mode):
+        best, res = None, None
+        for _ in range(2):
+            t0 = time.time()
+            res = timeline.simulate_timeline(inter, ev, "sparta", lat,
+                                             kernel_mode=mode, **kw)
+            best = time.time() - t0
+        return best, res
+
+    t_ref, ref = timed("reference")
+    t_pal, pal = timed(pallas_mode)
+    bit_identical = bool(
+        np.array_equal(ref.latency, pal.latency)
+        and np.array_equal(ref.overhead, pal.overhead)
+        and np.array_equal(ref.done, pal.done))
+    entry = {
+        "written_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "bench": "timeline",
+        "backend": jax.default_backend(),
+        "mode": pallas_mode,
+        "quick": quick,
+        "n_accesses": int(inter.shape[0]),
+        "t_reference_s": round(t_ref, 3),
+        "t_pallas_s": round(t_pal, 3),
+        "speedup": round(t_ref / t_pal, 2),
+        "bit_identical": bit_identical,
+    }
+    _append_bench_entry(entry)
+
+    print_csv(
+        "Timeline engine (fig11-style, 4 accels, SPARTA-32)",
+        ["backend", "seconds", "vs_reference"],
+        [["reference(lax.scan)", t_ref, 1.0],
+         [pallas_mode, t_pal, t_ref / t_pal]],
+    )
+    print(f"  timeline kernel bit-identical to reference: {bit_identical}")
+    assert bit_identical, "timeline kernel diverged from the lax.scan oracle"

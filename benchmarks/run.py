@@ -4,9 +4,11 @@
 Prints per-figure CSVs, the checked claims, and the roofline summary table
 (if the dry-run cache exists).  ``--kernel-mode`` selects the sweep-engine
 backend (auto/reference/pallas/pallas_interpret/stackdist) for the figures
-that run trace sweeps (fig4/8/9/10); ``stackdist`` is the exact sort-based
-stack-distance engine, which ``auto`` already prefers for the pure-LRU TLB
-sweeps (fig4/fig8) — see EXPERIMENTS.md."""
+that run trace sweeps (fig4/5/8/9/10/11); ``stackdist`` is the exact
+sort-based stack-distance engine, which ``auto`` already prefers for the
+pure-LRU TLB sweeps (fig4/fig5/fig8) — see EXPERIMENTS.md.  fig11 is the
+beyond-paper tail-latency figure driven by the cycle-approximate timeline
+engine (``repro.core.timeline``)."""
 from __future__ import annotations
 
 import argparse
@@ -17,7 +19,8 @@ import time
 from repro.kernels.common import SWEEP_MODES
 
 
-FIGS = ("fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "kernels")
+FIGS = ("fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+        "fig11", "kernels")
 
 
 def main(argv=None) -> None:
@@ -31,14 +34,14 @@ def main(argv=None) -> None:
     from benchmarks import (
         fig2_pagewalk, fig4_tlb_sensitivity, fig5_contention, fig6_pagefault,
         fig7_miss_penalty, fig8_multiprog, fig9_accel_tlb, fig10_performance,
-        kernel_bench,
+        fig11_tail_latency, kernel_bench,
     )
     modules = {
         "fig2": fig2_pagewalk, "fig4": fig4_tlb_sensitivity,
         "fig5": fig5_contention, "fig6": fig6_pagefault,
         "fig7": fig7_miss_penalty, "fig8": fig8_multiprog,
         "fig9": fig9_accel_tlb, "fig10": fig10_performance,
-        "kernels": kernel_bench,
+        "fig11": fig11_tail_latency, "kernels": kernel_bench,
     }
     chosen = args.only.split(",") if args.only else list(modules)
 

@@ -27,6 +27,11 @@ dipta         set-associative VM with way prediction: correct prediction
               fully overlaps; a misprediction pays an extra serialized DRAM
               access (paper §7.7).
 ideal         zero translation overhead.
+
+Every ``AccessTimes`` here is the exact mean of a per-access composition, so
+the cycle-approximate timeline engine (:mod:`repro.core.timeline`) degrades
+to this module when its queueing is disabled; use the timeline engine for
+latency *distributions* and contention in time.
 """
 from __future__ import annotations
 
@@ -72,10 +77,13 @@ def _fetch_time(ev: SystemEvents, lat: SystemLatencies) -> float:
 def conventional_access(ev: SystemEvents, lat: SystemLatencies) -> AccessTimes:
     """Virtual cache + accelerator TLB + (perfect-MMU-cache) page walks."""
     h_c = ev.cache_hit_ratio
-    h_t = ev.accel_tlb_hit_ratio  # measured on cache-miss stream (probe-on-miss)
+    # Accel TLB is probed only on cache misses in the virtual-cache baseline,
+    # so the walk term must be conditioned on the cache-miss stream:
+    # (1-h_c) * (1-h_t|miss) == P(cache miss AND TLB miss), which makes this
+    # average exactly the mean of the per-access Fig 3 composition (the
+    # timeline engine reproduces it access by access — tests/test_timeline.py).
+    h_t = ev.accel_tlb_hit_ratio_given_cache_miss()
     walk = 2.0 * lat.t_net + lat.l_dram  # one memory reference, over the network
-    # Hit ratio conditioning: accel TLB is probed only on cache misses in the
-    # virtual-cache baseline; SystemEvents measured it exactly that way.
     overhead = (1.0 - h_c) * (lat.l_tlb + (1.0 - h_t) * walk)
     fetch = _fetch_time(ev, lat)
     return AccessTimes(total=fetch + overhead, translation_overhead=overhead, fetch=fetch)
@@ -102,8 +110,9 @@ def sparta_access(
         return AccessTimes(total=fetch + miss_side, translation_overhead=miss_side, fetch=fetch)
     # Physical cache: every access probes the tiny accel TLB (l_tlb).  A cache
     # hit whose translation is absent must fetch the PTE from the memory side
-    # (full network round trip + mem TLB probe / local walk).
-    h_a = ev.accel_tlb_hit_ratio
+    # (full network round trip + mem TLB probe / local walk).  Conditioning on
+    # the cache-hit stream keeps h_c * (1-h_a|hit) == P(cache hit AND TLB miss).
+    h_a = ev.accel_tlb_hit_ratio_given_cache_hit()
     pte_fetch = 2.0 * lat.t_net + lat.l_tlb + (1.0 - h_m) * lat.l_dram
     overhead = lat.l_tlb + h_c * (1.0 - h_a) * pte_fetch + miss_side
     return AccessTimes(total=fetch + overhead, translation_overhead=overhead, fetch=fetch)

@@ -1,0 +1,222 @@
+"""Cycle-approximate event-timeline engine (per-access latency + queueing).
+
+:mod:`repro.core.cpi` turns measured hit *rates* into average per-access
+latency — it cannot express queueing contention on shared memory-side TLBs
+or latency *distributions*, exactly the effects SPARTA's partitioning is
+designed to remove.  This module composes a **per-access completion time**
+from the per-access hit/miss event bits already produced by
+:func:`repro.core.tlbsim.simulate_system` / :func:`repro.core.sweep.sweep_system`,
+threading three bounded resources through the Fig 3 timelines:
+
+* an MSHR-style window of outstanding misses per accelerator,
+* per-partition memory-side TLB service ports with FIFO queueing (SPARTA),
+* banked DRAM service slots (page walks, PTE reads and data fetches all
+  occupy a bank).
+
+Outputs are per-access latency/overhead arrays reduced to total cycles,
+throughput and p50/p95/p99 tails for the four designs
+(``conventional`` / ``sparta`` / ``dipta`` / ``ideal``).
+
+**Oracle property**: with every resource unbounded
+(:meth:`TimelineConfig.unbounded`) all queue waits vanish and the
+post-warmup *mean* latency / translation overhead reproduce
+:mod:`repro.core.cpi`'s analytical averages exactly (``tests/test_timeline.py``
+asserts <= 1e-6 relative error for all designs and workloads).
+
+The sequential hot loop lives in :mod:`repro.kernels.timeline` (jnp
+``lax.scan`` oracle + Pallas TPU kernel with the state resident in VMEM
+scratch, dispatched by ``kernel_mode`` like every other kernel package).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cpi import DIPTA_WAY_PREDICTION_ACCURACY
+from repro.core.sparta import SystemLatencies
+from repro.core.tlbsim import LINE_SHIFT, SystemEvents
+from repro.kernels.timeline import TimelineParams, timeline_sim
+
+__all__ = ["TimelineConfig", "TimelineResult", "simulate_timeline",
+           "round_robin_accel_ids", "DESIGNS"]
+
+DESIGNS = ("conventional", "sparta", "dipta", "ideal")
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineConfig:
+    """Queueing-resource configuration (defaults logged in EXPERIMENTS.md).
+
+    A count of 0 means the resource is *unbounded* — no queueing on it.
+    ``mshrs`` bounds outstanding misses per accelerator, ``tlb_ports`` is the
+    number of service ports of each partition's memory-side TLB, and
+    ``dram_banks`` the machine-wide number of DRAM banks.  ``tlb_service`` /
+    ``dram_service`` are the port/bank *occupancy* times per request and
+    default to the corresponding probe/access latencies (``l_tlb`` /
+    ``l_dram``); ``issue_interval`` is the cycles between successive issue
+    attempts of one accelerator (offered-load knob).
+    """
+
+    mshrs: int = 8
+    tlb_ports: int = 1
+    dram_banks: int = 16
+    tlb_service: Optional[float] = None
+    dram_service: Optional[float] = None
+    issue_interval: float = 1.0
+
+    @classmethod
+    def unbounded(cls, **kw) -> "TimelineConfig":
+        """No queueing anywhere — the cpi-consistency configuration."""
+        return cls(mshrs=0, tlb_ports=0, dram_banks=0, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineResult:
+    """Per-access timing arrays + reductions (post-warmup like SystemEvents)."""
+
+    latency: np.ndarray    # f32 [N] issue -> completion cycles
+    overhead: np.ndarray   # f32 [N] translation-induced component (incl. waits)
+    done: np.ndarray       # f32 [N] absolute completion times
+    cache_hit: np.ndarray  # bool [N]
+    n_warm: int
+
+    def _warm(self, x: np.ndarray) -> np.ndarray:
+        return x[x.shape[0] - self.n_warm:]
+
+    @property
+    def mean_latency(self) -> float:
+        w = self._warm(self.latency)
+        return float(w.mean(dtype=np.float64)) if w.size else 0.0
+
+    @property
+    def mean_overhead(self) -> float:
+        w = self._warm(self.overhead)
+        return float(w.mean(dtype=np.float64)) if w.size else 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        w = self._warm(self.latency)
+        return float(np.percentile(w, q)) if w.size else 0.0
+
+    def overhead_percentile(self, q: float, *, misses_only: bool = True) -> float:
+        """Tail of the translation-induced latency.  ``misses_only`` restricts
+        to cache-missing accesses (the translated stream): with high cache
+        hit rates an all-access p99 would be identically zero for every
+        design and say nothing about translation."""
+        w = self._warm(self.overhead)
+        if misses_only:
+            w = w[~self._warm(self.cache_hit)]
+        return float(np.percentile(w, q)) if w.size else 0.0
+
+    @property
+    def total_cycles(self) -> float:
+        """Makespan: first issue happens at t=0."""
+        return float(self.done.max()) if self.done.size else 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Accesses completed per cycle over the whole stream."""
+        return self.done.shape[0] / max(self.total_cycles, 1e-9)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "mean_latency": self.mean_latency,
+            "mean_overhead": self.mean_overhead,
+            "p50_latency": self.latency_percentile(50),
+            "p95_latency": self.latency_percentile(95),
+            "p99_latency": self.latency_percentile(99),
+            "p99_overhead": self.overhead_percentile(99),
+            "total_cycles": self.total_cycles,
+            "throughput": self.throughput,
+        }
+
+
+def round_robin_accel_ids(n: int, num_accels: int, granularity: int = 1) -> np.ndarray:
+    """Issuing-accelerator ids for a :func:`repro.core.traces.interleave`'d
+    trace (round-robin at ``granularity`` accesses per turn)."""
+    return ((np.arange(n) // granularity) % num_accels).astype(np.int32)
+
+
+def _pte_banks(vpns: np.ndarray, banks: int) -> np.ndarray:
+    """DRAM bank of each page's PTE: a cheap stateless scatter of the VPN so
+    walk/PTE traffic spreads over banks independently of the data lines."""
+    v = vpns.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    return ((v >> np.uint64(17)) % np.uint64(banks)).astype(np.int32)
+
+
+def simulate_timeline(
+    lines: np.ndarray,
+    events: SystemEvents,
+    design: str,
+    lat: SystemLatencies,
+    *,
+    cfg: TimelineConfig = TimelineConfig(),
+    num_partitions: int = 1,
+    page_shift: int = 12,
+    num_accelerators: int = 1,
+    accel_ids: Optional[np.ndarray] = None,
+    workload: str = "",
+    way_accuracy: Optional[float] = None,
+    kernel_mode: str = "auto",
+    block: int = 512,
+) -> TimelineResult:
+    """Per-access completion times for one (design, trace, events) triple.
+
+    ``events`` must come from the simulation of the *same* trace (``lines``)
+    with the matching geometry/partitioning (``simulate_system`` or a
+    ``sweep_system`` row).  ``num_accelerators`` > 1 models N accelerators
+    sharing the memory-side structures: the trace is their interleaved
+    stream (``traces.thread_traces`` + ``interleave``) and ``accel_ids``
+    names the issuer of each access (round-robin by default).
+    """
+    if design not in DESIGNS:
+        raise ValueError(f"unknown design {design!r}; options: {DESIGNS}")
+    n = int(lines.shape[0])
+    if accel_ids is None:
+        accel_ids = round_robin_accel_ids(n, num_accelerators)
+    vpns = lines >> (page_shift - LINE_SHIFT)
+
+    P = num_partitions if design == "sparta" else 1
+    part = (vpns % P).astype(np.int32)
+    banks = max(cfg.dram_banks, 1)
+    bank_d = (lines % banks).astype(np.int32)
+    bank_p = _pte_banks(vpns, banks)
+
+    c = events.cache_hit.astype(np.int32)
+    th = events.accel_tlb_hit.astype(np.int32)
+    mh = events.mem_tlb_hit.astype(np.int32)
+
+    pen = np.zeros(n, np.float32)
+    if design == "dipta":
+        acc = way_accuracy if way_accuracy is not None else \
+            DIPTA_WAY_PREDICTION_ACCURACY.get(workload, 0.75)
+        pen[:] = (1.0 - acc) * 2.0 * lat.l_dram
+
+    params = TimelineParams(
+        serial_walk=(design == "conventional"),
+        mem_tlb=(design == "sparta"),
+        num_accels=int(num_accelerators),
+        mshrs=int(cfg.mshrs),
+        num_partitions=int(P),
+        tlb_ports=int(cfg.tlb_ports),
+        dram_banks=int(cfg.dram_banks),
+        l_cache=float(lat.l_cache),
+        l_tlb=float(lat.l_tlb),
+        l_dram=float(lat.l_dram),
+        t_net=float(lat.t_net),
+        tlb_occ=float(cfg.tlb_service if cfg.tlb_service is not None else lat.l_tlb),
+        dram_occ=float(cfg.dram_service if cfg.dram_service is not None else lat.l_dram),
+        issue_interval=float(cfg.issue_interval),
+    )
+    latency, overhead, done = timeline_sim(
+        *(jnp.asarray(x) for x in (accel_ids, part, bank_d, bank_p, c, th, mh, pen)),
+        params, block=block, kernel_mode=kernel_mode)
+    return TimelineResult(
+        latency=np.asarray(latency),
+        overhead=np.asarray(overhead),
+        done=np.asarray(done),
+        cache_hit=events.cache_hit.astype(bool),
+        n_warm=events.n_warm,
+    )

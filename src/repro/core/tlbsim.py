@@ -253,6 +253,15 @@ class SystemEvents(NamedTuple):
             return 1.0
         return float(self.accel_tlb_hit[n0:][ch].mean())
 
+    def accel_tlb_hit_ratio_given_cache_miss(self) -> float:
+        """Accel-TLB hit rate on the cache-miss stream (virtual caches probe
+        the TLB only on misses; bits for cache hits are forced True)."""
+        n0 = self.cache_hit.shape[0] - self.n_warm
+        cm = ~self.cache_hit[n0:]
+        if cm.sum() == 0:
+            return 1.0
+        return float(self.accel_tlb_hit[n0:][cm].mean())
+
 
 def _geom(cfg: Optional[TLBConfig]) -> Tuple[int, int]:
     """(sets, ways) of a structure; absent structures degrade to 1x1.

@@ -1,0 +1,3 @@
+from repro.kernels.timeline.ops import TimelineParams, timeline_sim
+
+__all__ = ["TimelineParams", "timeline_sim"]

@@ -1,0 +1,111 @@
+"""Cycle-approximate timeline simulation as a Pallas TPU kernel.
+
+Same architecture as the ``tlb_sim`` trace kernel: the full queueing state
+(per-accelerator issue/MSHR windows, per-partition TLB port free times, DRAM
+bank free times — a few KB at any realistic configuration) stays **resident
+in VMEM scratch** for the entire trace.  TPU grids execute sequentially, so
+scratch persists across grid steps while each step streams one trace block
+(the eight per-access input columns) HBM->VMEM and writes the block's
+(latency, overhead, done) columns back.
+
+The per-access update is :func:`repro.kernels.timeline.ref.timeline_step` —
+*shared* with the ``lax.scan`` oracle, so the two paths are bit-identical by
+construction.  Inside the kernel the state is read from scratch as whole
+(small) arrays, advanced functionally, and stored back; the access loop is
+inherently serial (queue state carries a dependency) but each step is a
+handful of scalar gathers plus a ports-wide argmin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.timeline.ref import TimelineParams, timeline_step
+
+
+def _timeline_kernel(
+    a_ref, p_ref, bd_ref, bp_ref,   # int32 [BLK] ids
+    c_ref, th_ref, mh_ref,          # int32 [BLK] hit bits
+    pen_ref,                        # f32   [BLK] serialized penalty
+    lat_ref, ov_ref, done_ref,      # f32   [BLK] outputs
+    acc_scr, mshr_scr, cnt_scr, port_scr, bank_scr,  # persistent VMEM state
+    *,
+    block: int,
+    params: TimelineParams,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        mshr_scr[...] = jnp.zeros_like(mshr_scr)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+        port_scr[...] = jnp.zeros_like(port_scr)
+        bank_scr[...] = jnp.zeros_like(bank_scr)
+
+    def body(j, _):
+        state = (acc_scr[...], mshr_scr[...], cnt_scr[...],
+                 port_scr[...], bank_scr[...])
+        inp = (a_ref[j], p_ref[j], bd_ref[j], bp_ref[j],
+               c_ref[j], th_ref[j], mh_ref[j], pen_ref[j])
+        (acc, mshr, cnt, port, bank), (lat, ov, done) = timeline_step(
+            state, inp, params)
+        acc_scr[...] = acc
+        mshr_scr[...] = mshr
+        cnt_scr[...] = cnt
+        port_scr[...] = port
+        bank_scr[...] = bank
+        lat_ref[j] = lat
+        ov_ref[j] = ov
+        done_ref[j] = done
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("params", "block", "interpret"))
+def timeline_sim_pallas(
+    accel: jnp.ndarray,
+    part: jnp.ndarray,
+    bank_data: jnp.ndarray,
+    bank_pte: jnp.ndarray,
+    cache_hit: jnp.ndarray,
+    tlb_hit: jnp.ndarray,
+    mem_hit: jnp.ndarray,
+    pen: jnp.ndarray,
+    params: TimelineParams,
+    *,
+    block: int = 512,
+    interpret: bool = False,
+):
+    """Returns (latency, overhead, done), each f32 [N]."""
+    n = accel.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"trace length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    stream = pl.BlockSpec((block,), lambda i: (i,))
+    A = params.num_accels
+    outs = pl.pallas_call(
+        functools.partial(_timeline_kernel, block=block, params=params),
+        grid=grid,
+        in_specs=[stream] * 8,
+        out_specs=[stream] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((A,), jnp.float32),
+            pltpu.VMEM((A, max(params.mshrs, 1)), jnp.float32),
+            pltpu.VMEM((A,), jnp.int32),
+            pltpu.VMEM((max(params.num_partitions, 1), max(params.tlb_ports, 1)),
+                       jnp.float32),
+            pltpu.VMEM((max(params.dram_banks, 1),), jnp.float32),
+        ],
+        interpret=interpret,
+    )(accel.astype(jnp.int32), part.astype(jnp.int32),
+      bank_data.astype(jnp.int32), bank_pte.astype(jnp.int32),
+      cache_hit.astype(jnp.int32), tlb_hit.astype(jnp.int32),
+      mem_hit.astype(jnp.int32), pen.astype(jnp.float32))
+    return tuple(outs)

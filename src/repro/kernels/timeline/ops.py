@@ -1,0 +1,56 @@
+"""Public timeline-simulation op with kernel-mode dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import resolve_mode
+from repro.kernels.timeline.kernel import timeline_sim_pallas
+from repro.kernels.timeline.ref import TimelineParams, timeline_scan_ref
+
+__all__ = ["TimelineParams", "timeline_sim"]
+
+
+def timeline_sim(
+    accel: jnp.ndarray,      # int32 [N]
+    part: jnp.ndarray,       # int32 [N]
+    bank_data: jnp.ndarray,  # int32 [N]
+    bank_pte: jnp.ndarray,   # int32 [N]
+    cache_hit: jnp.ndarray,  # int32 [N]
+    tlb_hit: jnp.ndarray,    # int32 [N]
+    mem_hit: jnp.ndarray,    # int32 [N]
+    pen: jnp.ndarray,        # f32   [N]
+    params: TimelineParams,
+    *,
+    block: int = 512,
+    kernel_mode: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-access (latency, overhead, completion-time) for one trace.
+
+    The Pallas path streams whole blocks; the trace is padded with trailing
+    cache hits from accelerator 0 (they read state but complete locally and
+    cannot perturb any earlier access), then the padding's outputs dropped.
+    """
+    mode = resolve_mode(kernel_mode)
+    n = int(accel.shape[0])
+    if mode == "reference" or n == 0:
+        return timeline_scan_ref(
+            accel, part, bank_data, bank_pte,
+            cache_hit, tlb_hit, mem_hit, pen, params)
+    pad = (-n) % min(block, n)
+    if pad:
+        def pad_i(x, v):
+            return jnp.concatenate(
+                [x, jnp.full((pad,), v, dtype=x.dtype)])
+        accel, part = pad_i(accel, 0), pad_i(part, 0)
+        bank_data, bank_pte = pad_i(bank_data, 0), pad_i(bank_pte, 0)
+        cache_hit = pad_i(cache_hit, 1)  # padding = local cache hits
+        tlb_hit, mem_hit = pad_i(tlb_hit, 1), pad_i(mem_hit, 1)
+        pen = pad_i(pen, np.float32(0.0))
+    lat, ov, done = timeline_sim_pallas(
+        accel, part, bank_data, bank_pte,
+        cache_hit, tlb_hit, mem_hit, pen, params,
+        block=block, interpret=(mode == "pallas_interpret"))
+    return lat[:n], ov[:n], done[:n]

@@ -1,0 +1,211 @@
+"""Pure-jnp oracle for the cycle-approximate timeline engine.
+
+One :func:`timeline_step` advances the full queueing state by one trace
+access; :func:`timeline_scan_ref` wraps it in a ``lax.scan``.  The Pallas
+kernel (:mod:`repro.kernels.timeline.kernel`) executes the *same* step
+function against VMEM-resident state, so the two paths are bit-identical by
+construction (asserted by ``tests/test_timeline.py``).
+
+Latency composition per access (virtual-cache accelerator, Fig 3 timelines):
+
+* cache hit — ``l_cache``; never leaves the accelerator, no queueing.
+* cache miss — design-specific translation + data path with three queueing
+  points threaded in:
+
+  - **MSHR window** (per accelerator): a miss may only *issue* once one of
+    the accelerator's ``mshrs`` outstanding-miss slots is free (FIFO slot
+    reuse: the i-th miss waits on the (i - mshrs)-th miss's completion).
+  - **Memory-side TLB ports** (per partition, SPARTA only): a translation
+    waits for the earliest-free of the partition's ``tlb_ports`` ports and
+    occupies it for ``tlb_occ`` cycles.
+  - **DRAM banks** (machine-wide): every DRAM reference (page walk, PTE
+    read, data fetch) waits for its bank and occupies it for ``dram_occ``
+    cycles.
+
+With every resource unbounded (count 0) all waits vanish and the per-access
+latency is exactly the Fig 3 analytical composition, so the post-warmup mean
+reproduces :mod:`repro.core.cpi` — the subsystem's oracle property.
+
+Arithmetic is float32 but every default latency parameter is an integer
+number of cycles, so all absolute times and latencies stay exactly
+representable (integer cycle counts) far beyond any benchmark's horizon.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TimelineParams(NamedTuple):
+    """Static (compile-time) scan parameters.
+
+    ``serial_walk`` selects the conventional design (private accel-side TLB,
+    page walk serialized before the data fetch); ``mem_tlb`` selects SPARTA
+    (translation at the partition's memory-side TLB, overlapped with the
+    network traversal).  Neither flag => DIPTA/ideal (translation fully
+    overlapped; the per-access ``pen`` input carries DIPTA's serialized
+    way-misprediction penalty, 0 for ideal).
+
+    A resource count of 0 means *unbounded* (no queueing on that resource).
+    """
+
+    serial_walk: bool = False
+    mem_tlb: bool = False
+    num_accels: int = 1
+    mshrs: int = 0            # outstanding-miss slots per accelerator
+    num_partitions: int = 1   # memory-side TLB partitions (SPARTA P)
+    tlb_ports: int = 0        # service ports per partition TLB
+    dram_banks: int = 0       # DRAM banks machine-wide
+    l_cache: float = 2.0
+    l_tlb: float = 2.0
+    l_dram: float = 120.0
+    t_net: float = 390.0
+    tlb_occ: float = 2.0      # port busy time per probe
+    dram_occ: float = 120.0   # bank busy time per access
+    issue_interval: float = 1.0  # cycles between successive issues per accel
+
+
+def timeline_init_state(p: TimelineParams):
+    """All-zero queueing state (times in cycles; everything free at t=0)."""
+    A = p.num_accels
+    return (
+        jnp.zeros((A,), jnp.float32),                       # next nominal issue
+        jnp.zeros((A, max(p.mshrs, 1)), jnp.float32),       # MSHR slot free times
+        jnp.zeros((A,), jnp.int32),                         # per-accel miss count
+        jnp.zeros((max(p.num_partitions, 1), max(p.tlb_ports, 1)), jnp.float32),
+        jnp.zeros((max(p.dram_banks, 1),), jnp.float32),    # bank free times
+    )
+
+
+def timeline_step(state, inp, p: TimelineParams):
+    """Advance the queueing state by one access.
+
+    ``inp`` is the per-access tuple ``(accel, partition, bank_data, bank_pte,
+    cache_hit, tlb_hit, mem_tlb_hit, pen)`` (int32 scalars + float32 ``pen``).
+    Returns ``(state', (latency, overhead, done))`` where ``latency`` is
+    issue->completion cycles, ``overhead`` the translation-induced component
+    (including translation queue waits), ``done`` the absolute completion
+    time.  Latencies are composed from *segments* (waits + service times), not
+    endpoint differences, so unqueued runs are exact in float32 regardless of
+    how far absolute time has advanced.
+    """
+    acc_next, mshr_ring, mshr_cnt, port_free, bank_free = state
+    a, part, bank_d, bank_p, c, th, mh, pen = inp
+    zero = jnp.float32(0.0)
+    c_hit = c != 0
+    nominal = acc_next[a]
+
+    # --- MSHR admission: a miss needs a free outstanding-miss slot. ---------
+    if p.mshrs > 0:
+        slot = mshr_cnt[a] % p.mshrs
+        w_mshr = jnp.maximum(mshr_ring[a, slot] - nominal, zero)
+        issue = nominal + jnp.where(c_hit, zero, w_mshr)
+    else:
+        slot = jnp.int32(0)
+        issue = nominal
+
+    t0 = issue + p.l_cache  # cache probe; a miss leaves the accelerator here
+
+    # --- translation path (computed unconditionally, applied on miss) -------
+    if p.serial_walk:
+        # Conventional: private accel-side TLB probe, then a page walk (one
+        # memory reference over the network) serialized before the data fetch.
+        walk_arr = t0 + p.l_tlb + p.t_net
+        if p.dram_banks > 0:
+            w_walk = jnp.maximum(bank_free[bank_p] - walk_arr, zero)
+            do_walk = (~c_hit) & (th == 0)
+            bank_free = bank_free.at[bank_p].set(jnp.where(
+                do_walk, walk_arr + w_walk + p.dram_occ, bank_free[bank_p]))
+        else:
+            w_walk = zero
+        walk = 2.0 * p.t_net + w_walk + p.l_dram
+        trans = p.l_tlb + jnp.where(th != 0, zero, walk)
+        # data fetch departs only after the walk returns: l_cache + trans,
+        # then a full network round trip around the data DRAM access.
+        data_arr = t0 + trans + p.t_net
+        pen_eff = zero
+    elif p.mem_tlb:
+        # SPARTA: request reaches the partition after one traversal; the
+        # memory-side TLB probe queues on the partition's ports and a miss
+        # reads the PTE from the *local* DRAM (no extra traversals).
+        arr = t0 + p.t_net
+        if p.tlb_ports > 0:
+            row = port_free[part]
+            pslot = jnp.argmin(row)
+            w_port = jnp.maximum(row[pslot] - arr, zero)
+            port_free = port_free.at[part, pslot].set(jnp.where(
+                ~c_hit, arr + w_port + p.tlb_occ, row[pslot]))
+        else:
+            w_port = zero
+        probe_done = arr + w_port + p.l_tlb
+        if p.dram_banks > 0:
+            w_pte = jnp.maximum(bank_free[bank_p] - probe_done, zero)
+            do_pte = (~c_hit) & (mh == 0)
+            bank_free = bank_free.at[bank_p].set(jnp.where(
+                do_pte, probe_done + w_pte + p.dram_occ, bank_free[bank_p]))
+        else:
+            w_pte = zero
+        trans = w_port + p.l_tlb + jnp.where(mh != 0, zero, w_pte + p.l_dram)
+        data_arr = arr + trans  # translation completes at the partition
+        pen_eff = zero
+    else:
+        # DIPTA/ideal: translation fully overlapped with the row fetch; pen
+        # carries DIPTA's serialized way-misprediction penalty (0 for ideal).
+        trans = pen
+        data_arr = t0 + p.t_net
+        pen_eff = pen
+
+    # --- data DRAM access (all designs) -------------------------------------
+    if p.dram_banks > 0:
+        w_data = jnp.maximum(bank_free[bank_d] - data_arr, zero)
+        bank_free = bank_free.at[bank_d].set(jnp.where(
+            ~c_hit, data_arr + w_data + p.dram_occ + pen_eff, bank_free[bank_d]))
+    else:
+        w_data = zero
+
+    if p.serial_walk:
+        lat_miss = p.l_cache + trans + p.t_net + w_data + p.l_dram + p.t_net
+    elif p.mem_tlb:
+        lat_miss = p.l_cache + p.t_net + trans + w_data + p.l_dram + p.t_net
+    else:
+        lat_miss = p.l_cache + p.t_net + w_data + p.l_dram + pen_eff + p.t_net
+
+    latency = jnp.where(c_hit, jnp.float32(p.l_cache), lat_miss)
+    overhead = jnp.where(c_hit, zero, trans)
+    done = issue + latency
+
+    # --- state updates -------------------------------------------------------
+    if p.mshrs > 0:
+        mshr_ring = mshr_ring.at[a, slot].set(
+            jnp.where(c_hit, mshr_ring[a, slot], done))
+        mshr_cnt = mshr_cnt.at[a].add(jnp.where(c_hit, 0, 1))
+    acc_next = acc_next.at[a].set(issue + p.issue_interval)
+    return (acc_next, mshr_ring, mshr_cnt, port_free, bank_free), (
+        latency, overhead, done)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def timeline_scan_ref(
+    accel: jnp.ndarray,      # int32 [N] issuing accelerator id
+    part: jnp.ndarray,       # int32 [N] memory-side TLB partition id
+    bank_data: jnp.ndarray,  # int32 [N] DRAM bank of the data line
+    bank_pte: jnp.ndarray,   # int32 [N] DRAM bank of the PTE
+    cache_hit: jnp.ndarray,  # int32 [N] 1 = cache hit
+    tlb_hit: jnp.ndarray,    # int32 [N] accel-TLB hit (conventional)
+    mem_hit: jnp.ndarray,    # int32 [N] memory-side TLB hit (SPARTA)
+    pen: jnp.ndarray,        # f32   [N] serialized penalty (DIPTA)
+    params: TimelineParams,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sequential timeline simulation; returns (latency, overhead, done)."""
+
+    def step(state, inp):
+        return timeline_step(state, inp, params)
+
+    _, ys = jax.lax.scan(
+        step, timeline_init_state(params),
+        (accel, part, bank_data, bank_pte, cache_hit, tlb_hit, mem_hit, pen),
+    )
+    return ys

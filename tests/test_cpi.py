@@ -1,0 +1,157 @@
+"""Direct unit tests for the analytical CPI / timeline model (repro.core.cpi).
+
+The model's contract: each design's ``AccessTimes`` is the exact *mean* of
+the per-access Fig 3 latency composition over the event stream (that is what
+lets the cycle-approximate timeline engine degrade to it — see
+tests/test_timeline.py for the cross-subsystem check).
+"""
+import numpy as np
+import pytest
+
+from repro.core import cpi
+from repro.core.sparta import SystemLatencies
+from repro.core.tlbsim import SystemEvents
+
+LAT = SystemLatencies()  # defaults: l_cache=2, l_tlb=2, l_dram=120, t_net=390
+
+
+def make_events(cache_hit, accel_tlb_hit=None, mem_tlb_hit=None, n_warm=None):
+    """SystemEvents from explicit bit arrays.
+
+    Mirrors simulate_system's convention: structures not probed on an access
+    (accel/mem TLB on a cache hit) carry a forced True bit.
+    """
+    c = np.asarray(cache_hit, bool)
+    a = np.where(c, True, np.asarray(
+        accel_tlb_hit if accel_tlb_hit is not None else np.ones_like(c), bool))
+    m = np.where(c, True, np.asarray(
+        mem_tlb_hit if mem_tlb_hit is not None else np.ones_like(c), bool))
+    return SystemEvents(cache_hit=c, accel_tlb_hit=a, mem_tlb_hit=m,
+                        n_warm=c.shape[0] if n_warm is None else n_warm)
+
+
+def per_access_total(ev, design, way_accuracy=0.75):
+    """Mean of the explicit per-access Fig 3 composition (the timeline
+    engine's unqueued latency) — the closed form each design must match."""
+    c = ev.cache_hit.astype(float)
+    a = ev.accel_tlb_hit.astype(float)
+    m = ev.mem_tlb_hit.astype(float)
+    walk = 2 * LAT.t_net + LAT.l_dram
+    data = 2 * LAT.t_net + LAT.l_dram
+    fetch = LAT.l_cache + (1 - c) * data
+    if design == "conventional":
+        ov = (1 - c) * (LAT.l_tlb + (1 - a) * walk)
+    elif design == "sparta":
+        ov = (1 - c) * (LAT.l_tlb + (1 - m) * LAT.l_dram)
+    elif design == "dipta":
+        ov = (1 - c) * (1 - way_accuracy) * 2 * LAT.l_dram
+    else:
+        ov = np.zeros_like(c)
+    return float((fetch + ov).mean()), float(ov.mean())
+
+
+DESIGN_FNS = {
+    "conventional": lambda ev: cpi.conventional_access(ev, LAT),
+    "sparta": lambda ev: cpi.sparta_access(ev, LAT),
+    "dipta": lambda ev: cpi.dipta_access(ev, LAT, 0.75),
+    "ideal": lambda ev: cpi.ideal_access(ev, LAT),
+}
+
+
+@pytest.mark.parametrize("design", list(DESIGN_FNS))
+def test_access_times_equal_per_access_mean(design):
+    rng = np.random.default_rng(3)
+    ev = make_events(rng.random(400) < 0.6,
+                     rng.random(400) < 0.5, rng.random(400) < 0.7)
+    acc = DESIGN_FNS[design](ev)
+    total, ov = per_access_total(ev, design)
+    np.testing.assert_allclose(acc.total, total, rtol=1e-12)
+    np.testing.assert_allclose(acc.translation_overhead, ov, rtol=1e-12)
+    np.testing.assert_allclose(acc.total, acc.fetch + acc.translation_overhead,
+                               rtol=1e-12)
+
+
+def test_closed_form_corner_cases():
+    walk = 2 * LAT.t_net + LAT.l_dram
+    # All cache hits: no design exposes any translation overhead.
+    ev = make_events(np.ones(16, bool))
+    for fn in DESIGN_FNS.values():
+        acc = fn(ev)
+        assert acc.translation_overhead == 0.0
+        assert acc.total == LAT.l_cache
+    # All cache misses, all TLBs hit: overhead is exactly one probe.
+    ev = make_events(np.zeros(16, bool), np.ones(16, bool), np.ones(16, bool))
+    assert cpi.conventional_access(ev, LAT).translation_overhead == LAT.l_tlb
+    assert cpi.sparta_access(ev, LAT).translation_overhead == LAT.l_tlb
+    # All cache misses, all TLBs miss: conventional pays a full remote walk,
+    # SPARTA one *local* DRAM access.
+    ev = make_events(np.zeros(16, bool), np.zeros(16, bool), np.zeros(16, bool))
+    assert cpi.conventional_access(ev, LAT).translation_overhead == LAT.l_tlb + walk
+    assert cpi.sparta_access(ev, LAT).translation_overhead == LAT.l_tlb + LAT.l_dram
+
+
+def test_conventional_walk_term_conditions_on_cache_miss_stream():
+    """The walk term must weight P(cache miss AND TLB miss), not the product
+    of marginals: craft events where the unconditioned accel-TLB rate (with
+    its forced-True bits on cache hits) would understate the walks."""
+    c = np.array([True, True, True, False, False, False, False, False])
+    a = np.array([False, False, False, False, False, False, False, True])
+    ev = make_events(c, a)
+    walk = 2 * LAT.t_net + LAT.l_dram
+    miss_ratio = 5 / 8     # 5 of 8 accesses miss the cache (and probe the TLB)
+    misses_that_walk = 4 / 8
+    expect = miss_ratio * LAT.l_tlb + misses_that_walk * walk
+    np.testing.assert_allclose(
+        cpi.conventional_access(ev, LAT).translation_overhead, expect, rtol=1e-12)
+
+
+def test_design_ordering_on_shared_events():
+    """On identical event bits (same TLB behaviour for both designs):
+    ideal <= sparta <= conventional <= (conventional with more walks)."""
+    rng = np.random.default_rng(11)
+    for _ in range(5):
+        tlb = rng.random(300) < rng.uniform(0.2, 0.9)
+        ev = make_events(rng.random(300) < rng.uniform(0.1, 0.9), tlb, tlb)
+        ideal = cpi.ideal_access(ev, LAT).total
+        sparta = cpi.sparta_access(ev, LAT).total
+        conv = cpi.conventional_access(ev, LAT).total
+        assert ideal <= sparta <= conv
+
+
+def test_dipta_way_prediction_penalty_path():
+    ev = make_events(np.zeros(32, bool))  # every access misses the cache
+    # Exact penalty: (1-h_c) * (1-accuracy) * 2 DRAM accesses.
+    for acc in (1.0, 0.9, 0.5, 0.0):
+        got = cpi.dipta_access(ev, LAT, acc).translation_overhead
+        np.testing.assert_allclose(got, (1 - acc) * 2 * LAT.l_dram, rtol=1e-12)
+    # Perfect prediction degrades to ideal; worse prediction is monotonic.
+    assert cpi.dipta_access(ev, LAT, 1.0).total == cpi.ideal_access(ev, LAT).total
+    assert (cpi.dipta_access(ev, LAT, 0.4).total
+            > cpi.dipta_access(ev, LAT, 0.8).total)
+
+
+def test_evaluate_design_dipta_accuracy_lookup():
+    ev = make_events(np.zeros(32, bool))
+    per_workload = cpi.evaluate_design(
+        "dipta", ev, LAT, instr_per_access=5.0, workload="hash_table")
+    fallback = cpi.evaluate_design(
+        "dipta", ev, LAT, instr_per_access=5.0, workload="nonexistent")
+    acc_ht = cpi.DIPTA_WAY_PREDICTION_ACCURACY["hash_table"]
+    np.testing.assert_allclose(
+        per_workload.access.translation_overhead, (1 - acc_ht) * 2 * LAT.l_dram)
+    np.testing.assert_allclose(
+        fallback.access.translation_overhead, (1 - 0.75) * 2 * LAT.l_dram)
+    with pytest.raises(ValueError):
+        cpi.evaluate_design("bogus", ev, LAT, instr_per_access=5.0)
+
+
+def test_cycles_per_instruction_and_speedup():
+    ev = make_events(np.zeros(8, bool), np.ones(8, bool))
+    base = cpi.evaluate_design("conventional", ev, LAT, instr_per_access=4.0)
+    fast = cpi.evaluate_design("ideal", ev, LAT, instr_per_access=4.0)
+    # CPI = base_cpi + access_time / instr_per_access.
+    np.testing.assert_allclose(
+        base.cycles_per_instr, 1.0 + base.access.total / 4.0, rtol=1e-12)
+    assert fast.speedup_over(base) > 1.0
+    np.testing.assert_allclose(
+        fast.speedup_over(base), base.cycles_per_instr / fast.cycles_per_instr)

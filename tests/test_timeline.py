@@ -1,0 +1,159 @@
+"""Cycle-approximate timeline engine: cpi consistency + kernel bit-exactness.
+
+Two contracts:
+
+* **Oracle property** — with every queueing resource unbounded, the
+  post-warmup mean of the per-access timeline latency / translation overhead
+  reproduces :mod:`repro.core.cpi`'s analytical averages (<= 1e-6 relative)
+  for all four designs and all six workloads.
+* **Kernel** — the Pallas timeline kernel is bit-identical to the jnp
+  ``lax.scan`` reference (they share one ``timeline_step``), and with the
+  integral default latency table every latency is an integer cycle count.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cpi, timeline, traces
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.sweep import sweep_system
+from repro.core.tlbsim import SystemSimConfig
+from repro.kernels.timeline import TimelineParams, timeline_sim
+
+LAT = SystemLatencies()
+CACHE = TLBConfig(entries=256, ways=4)
+ACCEL_TLB = TLBConfig(entries=128, ways=4)
+MEM_TLB = TLBConfig(entries=128, ways=4)
+PARTITIONS = 32
+
+
+def _events(lines):
+    """(conventional, sparta) SystemEvents for one trace, one batched pass."""
+    evs = sweep_system(lines, [
+        SystemSimConfig(cache=CACHE, accel_tlb=ACCEL_TLB, mem_tlb=MEM_TLB,
+                        num_partitions=1, page_shift=12),
+        SystemSimConfig(cache=CACHE, accel_tlb=None, mem_tlb=MEM_TLB,
+                        num_partitions=PARTITIONS, page_shift=12),
+    ])
+    return evs[0], evs[1]
+
+
+@pytest.mark.parametrize("workload", traces.WORKLOADS)
+def test_unbounded_timeline_mean_matches_cpi(workload):
+    tr = traces.generate(workload, n_ops=1200, max_accesses=8000)
+    ev_conv, ev_sparta = _events(tr.lines)
+    for design in timeline.DESIGNS:
+        ev = ev_conv if design == "conventional" else ev_sparta
+        P = PARTITIONS if design == "sparta" else 1
+        perf = cpi.evaluate_design(design, ev, LAT, instr_per_access=5.0,
+                                   workload=workload)
+        res = timeline.simulate_timeline(
+            tr.lines, ev, design, LAT, cfg=timeline.TimelineConfig.unbounded(),
+            num_partitions=P, workload=workload, kernel_mode="reference")
+        rel = abs(res.mean_latency - perf.access.total) / perf.access.total
+        assert rel <= 1e-6, (workload, design, res.mean_latency, perf.access.total)
+        ov = perf.access.translation_overhead
+        rel_ov = abs(res.mean_overhead - ov) / max(ov, 1e-9)
+        assert rel_ov <= 1e-6, (workload, design, res.mean_overhead, ov)
+
+
+def _random_inputs(rng, n, params):
+    return (
+        rng.integers(0, params.num_accels, n).astype(np.int32),
+        rng.integers(0, params.num_partitions, n).astype(np.int32),
+        rng.integers(0, max(params.dram_banks, 1), n).astype(np.int32),
+        rng.integers(0, max(params.dram_banks, 1), n).astype(np.int32),
+        (rng.random(n) < 0.5).astype(np.int32),
+        (rng.random(n) < 0.6).astype(np.int32),
+        (rng.random(n) < 0.7).astype(np.int32),
+    )
+
+
+@pytest.mark.parametrize("serial_walk,mem_tlb,pen", [
+    (True, False, 0.0),    # conventional
+    (False, True, 0.0),    # sparta
+    (False, False, 24.0),  # dipta (integral penalty)
+    (False, False, 0.0),   # ideal
+])
+@pytest.mark.parametrize("blk", [128, 512])
+def test_timeline_kernel_bit_exact(rng, serial_walk, mem_tlb, pen, blk):
+    n = 1500  # not a block multiple: exercises the padding path
+    params = TimelineParams(
+        serial_walk=serial_walk, mem_tlb=mem_tlb, num_accels=4, mshrs=4,
+        num_partitions=8, tlb_ports=2, dram_banks=8)
+    inputs = _random_inputs(rng, n, params)
+    pen_arr = np.full(n, pen, np.float32)
+    ref = timeline_sim(*inputs, pen_arr, params, kernel_mode="reference")
+    pal = timeline_sim(*inputs, pen_arr, params, block=blk,
+                       kernel_mode="pallas_interpret")
+    for r, p in zip(ref, pal):
+        assert np.array_equal(np.asarray(r), np.asarray(p))
+    # Integral latency table => integer cycle counts, exactly.
+    lat = np.asarray(ref[0])
+    assert np.array_equal(lat, np.round(lat))
+    assert (lat >= params.l_cache).all()
+
+
+def test_timeline_kernel_bit_exact_unbounded(rng):
+    params = TimelineParams(mem_tlb=True, num_accels=2, num_partitions=4)
+    inputs = _random_inputs(rng, 1024, params)
+    pen = np.zeros(1024, np.float32)
+    ref = timeline_sim(*inputs, pen, params, kernel_mode="reference")
+    pal = timeline_sim(*inputs, pen, params, kernel_mode="pallas_interpret")
+    for r, p in zip(ref, pal):
+        assert np.array_equal(np.asarray(r), np.asarray(p))
+
+
+def test_queueing_only_adds_latency():
+    """Finite resources can only delay: per-access latency dominates the
+    unbounded run's access-by-access, and tails grow."""
+    streams = traces.thread_traces("skip_list", 4, n_ops=800, seed=7)
+    inter = traces.interleave(streams)[:8000]
+    _, ev = _events(inter)
+    kw = dict(num_partitions=PARTITIONS, num_accelerators=4,
+              kernel_mode="reference")
+    free = timeline.simulate_timeline(
+        inter, ev, "sparta", LAT, cfg=timeline.TimelineConfig.unbounded(), **kw)
+    tight = timeline.simulate_timeline(
+        inter, ev, "sparta", LAT,
+        cfg=timeline.TimelineConfig(mshrs=4, tlb_ports=1, dram_banks=4), **kw)
+    assert (tight.latency >= free.latency - 1e-5).all()
+    assert tight.mean_latency > free.mean_latency
+    assert tight.overhead_percentile(99) >= free.overhead_percentile(99)
+    assert tight.total_cycles > free.total_cycles
+    assert tight.throughput < free.throughput
+
+
+def test_mshr_window_throttles_issue():
+    """With one MSHR and one bank, an all-miss stream serializes completely:
+    miss i cannot issue before miss i-1 completed."""
+    n = 64
+    lines = (np.arange(n, dtype=np.int64) * 4096) >> 6  # all distinct pages
+    ev_conv, _ = _events(lines)
+    res = timeline.simulate_timeline(
+        lines, ev_conv, "ideal", LAT,
+        cfg=timeline.TimelineConfig(mshrs=1, tlb_ports=0, dram_banks=0),
+        kernel_mode="reference")
+    miss = ~res.cache_hit
+    done_miss = res.done[miss]
+    issue_miss = done_miss - res.latency[miss]
+    assert (issue_miss[1:] >= done_miss[:-1] - 1e-5).all()
+
+
+def test_result_reductions_and_accel_ids():
+    ids = timeline.round_robin_accel_ids(8, 4)
+    np.testing.assert_array_equal(ids, [0, 1, 2, 3, 0, 1, 2, 3])
+    ids_g = timeline.round_robin_accel_ids(8, 2, granularity=2)
+    np.testing.assert_array_equal(ids_g, [0, 0, 1, 1, 0, 0, 1, 1])
+
+    tr = traces.generate("hash_table", n_ops=600, max_accesses=4000)
+    ev_conv, _ = _events(tr.lines)
+    res = timeline.simulate_timeline(tr.lines, ev_conv, "conventional", LAT,
+                                     kernel_mode="reference")
+    s = res.summary()
+    assert s["p50_latency"] <= s["p95_latency"] <= s["p99_latency"]
+    assert s["total_cycles"] >= res.done.max() - 1e-6
+    assert 0 < s["throughput"] < 1e9
+    # Overhead tail on the translated (cache-missing) stream only.
+    assert res.overhead_percentile(99) >= res.overhead_percentile(50)
+    with pytest.raises(ValueError):
+        timeline.simulate_timeline(tr.lines, ev_conv, "bogus", LAT)
