@@ -4,6 +4,16 @@ Miss rate vs (threads x partitions) with 128-entry 4-way TLBs per partition.
 Each interleaved thread trace is streamed ONCE for all partition counts via
 the batched sweep engine (``sweep.sweep_tlb``; bit-identical to the
 per-config ``tlbsim.miss_ratio`` oracle it replaced).
+
+A second, beyond-paper **timeline half** asks what the contention costs in
+*cycles*: at max threads, the p99 translation-induced latency of a SPARTA
+memory side with P partitions (bounded TLB ports + banked DRAM, fig11's
+queueing config).  Every (workload x partition-count) cell reuses a slice of
+the same max-thread interleaved trace the miss-ratio grid already streams
+("differ only by slicing"), one ``sweep_system`` per workload feeds all
+partition counts, and all cells run as ONE batched ``sweep_timeline`` pass
+(bit-identical per cell to the looped ``simulate_timeline`` oracle).
+
 Claims (C3): contention on a single shared TLB grows with threads, but
 partitioning makes it vanish; (16 partitions, 16 threads) beats
 (1 partition, 1 thread) at equal aggregate entries/thread."""
@@ -12,24 +22,32 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Claim, W4, print_csv, save_fig
-from repro.core import traces
-from repro.core.sparta import TLBConfig
-from repro.core.sweep import TLBSweepSpec, sweep_tlb
+from repro.core import timeline, traces
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_system, sweep_tlb
+from repro.core.tlbsim import SystemSimConfig
 
 THREADS = (1, 2, 4, 8, 16)
 PARTS = (1, 4, 16, 64)
 TLB = TLBConfig(entries=128, ways=4)
+CACHE = TLBConfig(entries=256, ways=4)  # virtual cache for the timeline half
+QUEUES = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
 
 
 def run(quick: bool = False, kernel_mode: str = "auto"):
     n_ops = 4_000 if quick else 12_000
+    tl_cap = 12_000 if quick else 40_000
+    t_max = THREADS[-1]
     specs = [TLBSweepSpec(TLB, num_partitions=p, page_shift=12) for p in PARTS]
     results = {}
+    inter_max = {}  # workload -> the t_max interleaved trace (timeline reuse)
     for w in W4:
         grid = np.empty((len(PARTS), len(THREADS)))
         for i_t, t in enumerate(THREADS):
             streams = traces.thread_traces(w, t, n_ops=n_ops, seed=7)
             inter = traces.interleave(streams)[:1_200_000]
+            if t == t_max:
+                inter_max[w] = inter
             grid[:, i_t] = sweep_tlb(inter, specs, kernel_mode=kernel_mode).miss_ratios
         for i_p, p in enumerate(PARTS):
             results[f"{w}/P{p}"] = [float(x) for x in grid[i_p]]
@@ -46,8 +64,44 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
     )
     c3b = Claim("C3b", "(16 partitions, 16 threads) < (1 partition, 1 thread) miss ratio (workloads won)",
                 float(wins), (3, 4), "/4")
+
+    # --- timeline half: queueing cost of contention at max threads ----------
+    # The miss-ratio grid above is what sweep-only modes ("stackdist") are
+    # for; the timeline engine has its own backends, so fall back to "auto"
+    # for it — loudly, not silently — rather than discarding the whole
+    # figure.  (fig11, a pure-timeline figure, rejects such modes instead.)
+    tl_mode = kernel_mode
+    if kernel_mode == "stackdist":
+        tl_mode = "auto"
+        print(f"  (fig5 timeline half: kernel_mode={kernel_mode!r} is "
+              f"sweep-only; running the timeline half with 'auto')")
+    lat = SystemLatencies(n_sockets=8)
+    tl_specs = []
+    for w in W4:
+        sl = inter_max[w][:tl_cap]  # slice of the already-streamed trace
+        evs = sweep_system(sl, [
+            SystemSimConfig(cache=CACHE, accel_tlb=None, mem_tlb=TLB,
+                            num_partitions=p, page_shift=12)
+            for p in PARTS
+        ], kernel_mode=kernel_mode)
+        for i_p, p in enumerate(PARTS):
+            tl_specs.append(timeline.TimelineSpec(
+                sl, evs[i_p], "sparta", cfg=QUEUES, num_partitions=p,
+                num_accelerators=t_max))
+    tl_res = timeline.sweep_timeline(tl_specs, lat, kernel_mode=tl_mode)
+    tl_p99 = {}
+    tl_rows = []
+    for i, w in enumerate(W4):
+        per_w = tl_res[i * len(PARTS):(i + 1) * len(PARTS)]
+        tl_p99[w] = [r.overhead_percentile(99) for r in per_w]
+        tl_rows.append([w] + tl_p99[w])
+
     print_csv("Fig5 miss ratio vs threads", ["workload", "partitions"] + [str(t) for t in THREADS], rows)
+    print_csv(
+        f"Fig5 timeline half: p99 translation latency at {t_max} threads (SPARTA, queued)",
+        ["workload"] + [f"P{p}" for p in PARTS], tl_rows)
     print(c3a); print(c3b)
     save_fig("fig5", {"threads": THREADS, "parts": PARTS, "results": results,
+                      "timeline_p99": tl_p99, "timeline_cap": tl_cap,
                       "claims": [c3a.row(), c3b.row()]})
     return [c3a, c3b]

@@ -150,6 +150,8 @@ def run(quick: bool = False):
 
     _sweep_bench(quick)
     _timeline_bench(quick)
+    _timeline_batched_bench(quick)
+    check_bench_history()
     return []
 
 
@@ -213,8 +215,6 @@ def _sweep_bench(quick: bool):
         entry["t_pallas_s"] = round(t_pal, 3)
         entry["pallas_bit_identical"] = bool(np.array_equal(ref.hits, pal.hits))
 
-    _append_bench_entry(entry)
-
     print_csv(
         "Sweep engine (fig4-style, one trace, 8 configs)",
         ["backend", "seconds", "vs_reference"],
@@ -222,7 +222,12 @@ def _sweep_bench(quick: bool):
          ["stackdist", t_sd, t_ref / t_sd]],
     )
     print(f"  stackdist bit-identical to reference: {bit_identical}")
+    # Assert BEFORE recording: a diverging run must fail loudly, not poison
+    # the BENCH_sweep.json history the CI gate scans.
     assert bit_identical, "stackdist sweep diverged from the batched-scan oracle"
+    assert entry.get("pallas_bit_identical", True), \
+        "pallas sweep diverged from the batched-scan oracle"
+    _append_bench_entry(entry)
 
 
 def _timeline_bench(quick: bool):
@@ -279,8 +284,6 @@ def _timeline_bench(quick: bool):
         "speedup": round(t_ref / t_pal, 2),
         "bit_identical": bit_identical,
     }
-    _append_bench_entry(entry)
-
     print_csv(
         "Timeline engine (fig11-style, 4 accels, SPARTA-32)",
         ["backend", "seconds", "vs_reference"],
@@ -288,4 +291,142 @@ def _timeline_bench(quick: bool):
          [pallas_mode, t_pal, t_ref / t_pal]],
     )
     print(f"  timeline kernel bit-identical to reference: {bit_identical}")
+    # Assert BEFORE recording (see _sweep_bench).
     assert bit_identical, "timeline kernel diverged from the lax.scan oracle"
+    _append_bench_entry(entry)
+
+
+def _timeline_batched_bench(quick: bool):
+    """fig11-scale batched timeline sweep: the looped per-sim reference
+    (one ``simulate_timeline`` scan per cell) vs ``sweep_timeline``'s single
+    batched scan vs the batched Pallas kernel, appended to BENCH_sweep.json.
+
+    The non-quick matrix is the full fig11 cell grid (4 workloads x 5 accel
+    counts x 2 designs = 40 sims); the batched engine must stay bit-identical
+    per sim and is the fix for the recorded 0.87x single-sim kernel entry —
+    the sim axis gives the kernel (and the scan) something to amortize.
+    """
+    from repro.core import timeline, traces
+    from repro.core.sparta import SystemLatencies, TLBConfig
+    from repro.core.sweep import sweep_system
+    from repro.core.tlbsim import SystemSimConfig
+
+    workloads = ("bst_external", "hash_table") if quick else \
+        ("bst_external", "bst_internal", "hash_table", "skip_list")
+    accel_counts = (1, 4, 16) if quick else (1, 2, 4, 8, 16)
+    n_acc = 8_000 if quick else 60_000
+    lat = SystemLatencies(n_sockets=8)
+    queues = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
+    cache = TLBConfig(entries=256, ways=4)
+    mem = TLBConfig(entries=128, ways=4)
+    accel_tlb = TLBConfig(entries=128, ways=4)
+
+    specs = []
+    for w in workloads:
+        streams = traces.thread_traces(w, max(accel_counts), n_ops=2 * n_acc // 20, seed=7)
+        inter = traces.interleave(streams)[:n_acc]
+        evs = sweep_system(inter, [
+            SystemSimConfig(cache=cache, accel_tlb=accel_tlb, mem_tlb=mem,
+                            num_partitions=1, page_shift=12),
+            SystemSimConfig(cache=cache, accel_tlb=None, mem_tlb=mem,
+                            num_partitions=32, page_shift=12)])
+        for A in accel_counts:
+            ids = timeline.round_robin_accel_ids(inter.shape[0], A)
+            specs.append(timeline.TimelineSpec(
+                inter, evs[0], "conventional", cfg=queues,
+                num_accelerators=A, accel_ids=ids))
+            specs.append(timeline.TimelineSpec(
+                inter, evs[1], "sparta", cfg=queues, num_partitions=32,
+                num_accelerators=A, accel_ids=ids))
+
+    def timed(fn):
+        best, res = None, None
+        for _ in range(2):
+            t0 = time.time()
+            res = fn()
+            t = time.time() - t0
+            best = t if best is None else min(best, t)
+        return best, res
+
+    def looped():
+        return [timeline.simulate_timeline(
+            sp.lines, sp.events, sp.design, lat, cfg=sp.cfg,
+            num_partitions=sp.num_partitions,
+            num_accelerators=sp.num_accelerators, accel_ids=sp.accel_ids,
+            kernel_mode="reference") for sp in specs]
+
+    pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    t_loop, ref = timed(looped)
+    t_bat, bat = timed(
+        lambda: timeline.sweep_timeline(specs, lat, kernel_mode="reference"))
+    t_pal, pal = timed(
+        lambda: timeline.sweep_timeline(specs, lat, kernel_mode=pallas_mode))
+
+    def identical(xs):
+        return bool(all(
+            np.array_equal(getattr(x, k), getattr(r, k))
+            for x, r in zip(xs, ref) for k in ("latency", "overhead", "done")))
+
+    bit_identical = identical(bat)
+    pallas_identical = identical(pal)
+    entry = {
+        "written_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "bench": "timeline_batched",
+        "backend": jax.default_backend(),
+        "mode": pallas_mode,
+        "quick": quick,
+        "n_sims": len(specs),
+        "n_accesses": int(n_acc),
+        "t_looped_s": round(t_loop, 3),
+        "t_batched_s": round(t_bat, 3),
+        "t_pallas_s": round(t_pal, 3),
+        "speedup": round(t_loop / t_bat, 2),
+        "bit_identical": bit_identical and pallas_identical,
+    }
+    print_csv(
+        f"Batched timeline engine ({len(specs)} sims x {n_acc} accesses)",
+        ["backend", "seconds", "vs_looped"],
+        [["looped reference (per-sim scans)", t_loop, 1.0],
+         ["sweep_timeline (batched scan)", t_bat, t_loop / t_bat],
+         [f"sweep_timeline ({pallas_mode})", t_pal, t_loop / t_pal]],
+    )
+    print(f"  batched scan bit-identical to looped oracle: {bit_identical}")
+    print(f"  batched {pallas_mode} bit-identical to looped oracle: {pallas_identical}")
+    # Assert BEFORE recording (see _sweep_bench).
+    assert bit_identical, "sweep_timeline diverged from the per-sim oracle"
+    assert pallas_identical, "batched timeline kernel diverged from the per-sim oracle"
+    _append_bench_entry(entry)
+
+
+def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH) -> None:
+    """Fail (the CI smoke step) if any recorded BENCH_sweep.json row reports
+    a bit-identity violation — a perf number from a diverging backend is not
+    a result."""
+    if not path.exists():
+        return
+    hist = json.loads(path.read_text()).get("history", [])
+    bad = [
+        (i, e) for i, e in enumerate(hist)
+        if any(k.endswith("bit_identical") and e[k] is False for k in e)
+    ]
+    if bad:
+        lines = "\n".join(
+            f"  history[{i}]: bench={e.get('bench', 'sweep')!r} "
+            f"written_at={e.get('written_at')!r}" for i, e in bad)
+        raise SystemExit(
+            f"BENCH_sweep.json records {len(bad)} non-bit-identical row(s):\n{lines}")
+    print(f"  BENCH_sweep.json: all {len(hist)} recorded rows bit-identical")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="only verify BENCH_sweep.json bit-identity history")
+    args = ap.parse_args()
+    if args.check:
+        check_bench_history()
+    else:
+        run(quick=args.quick)

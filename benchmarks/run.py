@@ -7,8 +7,13 @@ backend (auto/reference/pallas/pallas_interpret/stackdist) for the figures
 that run trace sweeps (fig4/5/8/9/10/11); ``stackdist`` is the exact
 sort-based stack-distance engine, which ``auto`` already prefers for the
 pure-LRU TLB sweeps (fig4/fig5/fig8) — see EXPERIMENTS.md.  fig11 is the
-beyond-paper tail-latency figure driven by the cycle-approximate timeline
-engine (``repro.core.timeline``)."""
+beyond-paper tail-latency figure driven by the batched cycle-approximate
+timeline engine (``repro.core.timeline.sweep_timeline``), which rejects
+sweep-only modes such as ``stackdist`` with a ValueError naming its valid
+backends (no silent coercion) — run fig11 with ``auto`` or ``--only`` the
+sweep figures.  fig5 is a hybrid: its miss-ratio grid threads the mode
+through (``stackdist`` applies), and its timeline half falls back to
+``auto`` for sweep-only modes with a printed notice."""
 from __future__ import annotations
 
 import argparse

@@ -210,33 +210,46 @@ def sweep_tlb(
     return BatchedTLBResult(hits=hits, n_warm=n - n0)
 
 
-def _vmem_chunks(geoms: Sequence[Tuple[int, int]], *, block: int = 512) -> list:
-    """Partition config indices so each chunk's VMEM footprint — stacked LRU
-    state (2 x B x max_sets x max_ways x int32) plus the streamed trace
-    blocks (3 x B x block x int32 for set/tag/hit) — fits the scratch budget.
+def envelope_chunks(
+    dims: Sequence[Tuple[int, ...]],
+    state_elems,
+    *,
+    stream_words: int,
+    budget_bytes: int,
+) -> list:
+    """Greedy VMEM chunker shared by every batched engine (TLB sweep here,
+    timeline sweep in :mod:`repro.core.timeline`): partition item indices so
+    each chunk's scratch footprint — per-item state on the chunk's
+    elementwise-max envelope (``state_elems(dims)`` 4-byte words) plus the
+    streamed trace columns (``stream_words`` per item) — fits the budget.
 
-    Sorting by padded footprint groups like-sized geometries, so a few huge
-    configs don't inflate the envelope of every small one.  A chunk always
-    takes at least one config (a single config never exceeds VMEM for any
-    geometry in the paper's range).
+    Sorting by padded footprint groups like-sized configurations, so a few
+    huge items don't inflate the envelope of every small one.  A chunk always
+    takes at least one item.
     """
-    order = sorted(range(len(geoms)), key=lambda i: geoms[i][0] * geoms[i][1])
+    order = sorted(range(len(dims)), key=lambda i: state_elems(dims[i]))
     chunks, cur = [], []
-    cur_sets = cur_ways = 0
+    env: Tuple[int, ...] = ()
     for i in order:
-        b = len(cur) + 1
-        sets = max(cur_sets, geoms[i][0])
-        w = max(cur_ways, geoms[i][1])
-        # +1 set row: trace-padding accesses may get parked there.
-        vmem_bytes = (2 * (sets + 1) * w + 3 * block) * b * 4
-        if cur and vmem_bytes > _VMEM_STATE_BUDGET_BYTES:
+        new_env = dims[i] if not cur else tuple(map(max, env, dims[i]))
+        vmem_bytes = (state_elems(new_env) + stream_words) * (len(cur) + 1) * 4
+        if cur and vmem_bytes > budget_bytes:
             chunks.append(cur)
-            cur = []
-            sets, w = geoms[i][0], geoms[i][1]
+            cur, new_env = [], dims[i]
         cur.append(i)
-        cur_sets, cur_ways = sets, w
+        env = new_env
     chunks.append(cur)
     return chunks
+
+
+def _vmem_chunks(geoms: Sequence[Tuple[int, int]], *, block: int = 512) -> list:
+    """TLB-sweep instantiation of :func:`envelope_chunks`: stacked LRU state
+    is 2 x (sets + 1) x ways int32 per config (+1 set row because
+    trace-padding accesses may get parked there) and each config streams
+    3 x block words (set/tag/hit)."""
+    return envelope_chunks(
+        geoms, lambda g: 2 * (g[0] + 1) * g[1],
+        stream_words=3 * block, budget_bytes=_VMEM_STATE_BUDGET_BYTES)
 
 
 # ---------------------------------------------------------------------------

@@ -30,7 +30,7 @@ scratch, dispatched by ``kernel_mode`` like every other kernel package).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -38,10 +38,17 @@ import numpy as np
 from repro.core.cpi import DIPTA_WAY_PREDICTION_ACCURACY
 from repro.core.sparta import SystemLatencies
 from repro.core.tlbsim import LINE_SHIFT, SystemEvents
-from repro.kernels.timeline import TimelineParams, timeline_sim
+from repro.kernels.timeline import (
+    TimelineParams,
+    pack_params,
+    resolve_timeline_mode,
+    timeline_sim,
+    timeline_sim_batched,
+)
 
-__all__ = ["TimelineConfig", "TimelineResult", "simulate_timeline",
-           "round_robin_accel_ids", "DESIGNS"]
+__all__ = ["TimelineConfig", "TimelineResult", "TimelineSpec",
+           "simulate_timeline", "sweep_timeline", "round_robin_accel_ids",
+           "DESIGNS"]
 
 DESIGNS = ("conventional", "sparta", "dipta", "ideal")
 
@@ -146,31 +153,22 @@ def _pte_banks(vpns: np.ndarray, banks: int) -> np.ndarray:
     return ((v >> np.uint64(17)) % np.uint64(banks)).astype(np.int32)
 
 
-def simulate_timeline(
+def _timeline_inputs(
     lines: np.ndarray,
     events: SystemEvents,
     design: str,
     lat: SystemLatencies,
-    *,
-    cfg: TimelineConfig = TimelineConfig(),
-    num_partitions: int = 1,
-    page_shift: int = 12,
-    num_accelerators: int = 1,
-    accel_ids: Optional[np.ndarray] = None,
-    workload: str = "",
-    way_accuracy: Optional[float] = None,
-    kernel_mode: str = "auto",
-    block: int = 512,
-) -> TimelineResult:
-    """Per-access completion times for one (design, trace, events) triple.
-
-    ``events`` must come from the simulation of the *same* trace (``lines``)
-    with the matching geometry/partitioning (``simulate_system`` or a
-    ``sweep_system`` row).  ``num_accelerators`` > 1 models N accelerators
-    sharing the memory-side structures: the trace is their interleaved
-    stream (``traces.thread_traces`` + ``interleave``) and ``accel_ids``
-    names the issuer of each access (round-robin by default).
-    """
+    cfg: TimelineConfig,
+    num_partitions: int,
+    page_shift: int,
+    num_accelerators: int,
+    accel_ids: Optional[np.ndarray],
+    workload: str,
+    way_accuracy: Optional[float],
+) -> Tuple[Tuple[np.ndarray, ...], TimelineParams]:
+    """The single address/event-to-input rule every timeline backend shares
+    (bit-identity of the batched engine depends on it): per-access id/hit/pen
+    columns plus the static :class:`TimelineParams` of one simulation."""
     if design not in DESIGNS:
         raise ValueError(f"unknown design {design!r}; options: {DESIGNS}")
     n = int(lines.shape[0])
@@ -210,8 +208,43 @@ def simulate_timeline(
         dram_occ=float(cfg.dram_service if cfg.dram_service is not None else lat.l_dram),
         issue_interval=float(cfg.issue_interval),
     )
+    return (accel_ids.astype(np.int32), part, bank_d, bank_p, c, th, mh, pen), params
+
+
+def simulate_timeline(
+    lines: np.ndarray,
+    events: SystemEvents,
+    design: str,
+    lat: SystemLatencies,
+    *,
+    cfg: TimelineConfig = TimelineConfig(),
+    num_partitions: int = 1,
+    page_shift: int = 12,
+    num_accelerators: int = 1,
+    accel_ids: Optional[np.ndarray] = None,
+    workload: str = "",
+    way_accuracy: Optional[float] = None,
+    kernel_mode: str = "auto",
+    block: int = 512,
+) -> TimelineResult:
+    """Per-access completion times for one (design, trace, events) triple.
+
+    ``events`` must come from the simulation of the *same* trace (``lines``)
+    with the matching geometry/partitioning (``simulate_system`` or a
+    ``sweep_system`` row).  ``num_accelerators`` > 1 models N accelerators
+    sharing the memory-side structures: the trace is their interleaved
+    stream (``traces.thread_traces`` + ``interleave``) and ``accel_ids``
+    names the issuer of each access (round-robin by default).
+
+    This is the reference path; for a sweep of many (design x workload x
+    accel-count) cells use :func:`sweep_timeline`, which streams all cells
+    in one pass and is bit-identical per cell.
+    """
+    inputs, params = _timeline_inputs(
+        lines, events, design, lat, cfg, num_partitions, page_shift,
+        num_accelerators, accel_ids, workload, way_accuracy)
     latency, overhead, done = timeline_sim(
-        *(jnp.asarray(x) for x in (accel_ids, part, bank_d, bank_p, c, th, mh, pen)),
+        *(jnp.asarray(x) for x in inputs),
         params, block=block, kernel_mode=kernel_mode)
     return TimelineResult(
         latency=np.asarray(latency),
@@ -220,3 +253,137 @@ def simulate_timeline(
         cache_hit=events.cache_hit.astype(bool),
         n_warm=events.n_warm,
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-simulation sweep: all (design x workload x accel-count) cells
+# advance per trace element in ONE pass.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TimelineSpec:
+    """One cell of a timeline sweep: (trace, events, design, queue config,
+    accelerator count) plus the per-design knobs of
+    :func:`simulate_timeline`.
+
+    ``events`` must come from the simulation of the *same* ``lines`` trace
+    with the matching geometry/partitioning (a ``sweep_system`` row — one
+    batched system pass can feed many specs).  ``lat=None`` falls back to the
+    ``lat`` argument of :func:`sweep_timeline`, so a shared latency table is
+    stated once per sweep.
+    """
+
+    lines: np.ndarray
+    events: SystemEvents
+    design: str
+    lat: Optional[SystemLatencies] = None
+    cfg: TimelineConfig = TimelineConfig()
+    num_partitions: int = 1
+    page_shift: int = 12
+    num_accelerators: int = 1
+    accel_ids: Optional[np.ndarray] = None
+    workload: str = ""
+    way_accuracy: Optional[float] = None
+
+
+# Same per-core scratch discipline as repro.core.sweep: cap the stacked VMEM
+# footprint (queueing state + streamed trace blocks per sim) and chunk the
+# sim axis when a sweep's padded envelope would not fit.  Chunks still stream
+# the trace once each.
+_VMEM_STATE_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _timeline_vmem_chunks(
+    dims: Sequence[Tuple[int, int, int, int, int]], *, block: int = 512
+) -> List[List[int]]:
+    """Timeline instantiation of :func:`repro.core.sweep.envelope_chunks`:
+    the stacked queueing state on a chunk's (A, M, P, T, D) envelope is
+    A + A*M + A + P*T + D words per sim and each sim streams 11 x block
+    words (8 input + 3 output per-access columns)."""
+    from repro.core.sweep import envelope_chunks
+
+    def state_elems(d):
+        A, M, P, T, D = d
+        return A + A * M + A + P * T + D
+
+    return envelope_chunks(
+        dims, state_elems,
+        stream_words=11 * block, budget_bytes=_VMEM_STATE_BUDGET_BYTES)
+
+
+def sweep_timeline(
+    specs: Sequence[TimelineSpec],
+    lat: Optional[SystemLatencies] = None,
+    *,
+    kernel_mode: str = "auto",
+    block: int = 512,
+) -> List[TimelineResult]:
+    """Simulate every spec's timeline in a single pass over the trace axis.
+
+    Specs are padded to a common resource envelope (accelerators, MSHRs,
+    partitions, TLB ports, DRAM banks, trace length), their queueing states
+    stacked on a leading sim axis, and all sims advanced per trace element
+    through one vmapped ``lax.scan`` (or the batched Pallas kernel, chunked
+    over the sim axis to the VMEM scratch budget).  Padding is poisoned so it
+    is unobservable: trailing trace padding is zero-latency cache hits from
+    accelerator 0 (reads state, completes locally, outputs dropped) and
+    padded resource slots are never selected (see
+    ``repro.kernels.timeline.ref``).  Per-spec results are **bit-identical**
+    to :func:`simulate_timeline`, which stays the reference path
+    (tests/test_timeline_sweep.py asserts equivalence).
+    """
+    if not specs:
+        raise ValueError("sweep_timeline needs at least one spec")
+    prepared = []
+    for sp in specs:
+        sp_lat = sp.lat if sp.lat is not None else lat
+        if sp_lat is None:
+            raise ValueError(
+                "sweep_timeline: spec has lat=None and no sweep-level lat given")
+        prepared.append(_timeline_inputs(
+            sp.lines, sp.events, sp.design, sp_lat, sp.cfg, sp.num_partitions,
+            sp.page_shift, sp.num_accelerators, sp.accel_ids, sp.workload,
+            sp.way_accuracy))
+
+    lens = [int(p[0][0].shape[0]) for p in prepared]
+    n_max = max(lens)
+    packed = [pack_params(params) for _, params in prepared]
+    fparams = np.stack([fp for fp, _ in packed])
+    iparams = np.stack([ip for _, ip in packed])
+
+    # Trace-length padding: trailing zero-latency cache hits from accel 0
+    # (exactly the Pallas block-padding discipline; outputs are dropped).
+    pad_vals = (0, 0, 0, 0, 1, 1, 1, np.float32(0.0))
+    cols = []
+    for (inputs, _), n in zip(prepared, lens):
+        row = [np.concatenate([x, np.full(n_max - n, v, dtype=x.dtype)])
+               if n < n_max else x
+               for x, v in zip(inputs, pad_vals)]
+        cols.append(row)
+    stacked = [np.stack([row[k] for row in cols]) for k in range(8)]
+
+    mode = resolve_timeline_mode(kernel_mode, batch=len(specs))
+    if mode == "reference":
+        chunks = [list(range(len(specs)))]
+    else:
+        dims = [tuple(max(int(x), 1) for x in ip[2:7]) for ip in iparams]
+        chunks = _timeline_vmem_chunks(dims, block=min(block, max(n_max, 1)))
+
+    lat_b = np.empty((len(specs), n_max), np.float32)
+    ov_b = np.empty((len(specs), n_max), np.float32)
+    done_b = np.empty((len(specs), n_max), np.float32)
+    for chunk in chunks:
+        out = timeline_sim_batched(
+            *(jnp.asarray(s[chunk]) for s in stacked),
+            fparams[chunk], iparams[chunk],
+            block=block, kernel_mode=mode)
+        lat_b[chunk], ov_b[chunk], done_b[chunk] = (np.asarray(o) for o in out)
+
+    return [
+        TimelineResult(
+            latency=lat_b[i, :n], overhead=ov_b[i, :n], done=done_b[i, :n],
+            cache_hit=sp.events.cache_hit.astype(bool),
+            n_warm=sp.events.n_warm,
+        )
+        for i, (sp, n) in enumerate(zip(specs, lens))
+    ]

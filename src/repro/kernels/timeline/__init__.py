@@ -1,3 +1,12 @@
-from repro.kernels.timeline.ops import TimelineParams, timeline_sim
+from repro.kernels.timeline.ops import (
+    FP_COLS,
+    IP_COLS,
+    TimelineParams,
+    pack_params,
+    resolve_timeline_mode,
+    timeline_sim,
+    timeline_sim_batched,
+)
 
-__all__ = ["TimelineParams", "timeline_sim"]
+__all__ = ["TimelineParams", "timeline_sim", "timeline_sim_batched",
+           "pack_params", "resolve_timeline_mode", "FP_COLS", "IP_COLS"]

@@ -14,6 +14,17 @@ construction.  Inside the kernel the state is read from scratch as whole
 (small) arrays, advanced functionally, and stored back; the access loop is
 inherently serial (queue state carries a dependency) but each step is a
 handful of scalar gathers plus a ports-wide argmin.
+
+``timeline_sim_batched_pallas`` adds the **sim batch dimension** for the
+``sweep_timeline`` engine (:mod:`repro.core.timeline`): B sims' queueing
+states are stacked as the leading VMEM scratch axis (padded to the batch's
+common resource envelope, poisoned per ``ref.timeline_init_state_batched``),
+each grid step fetches one trace block HBM->VMEM once for all sims, and the
+per-sim configuration rides along as packed ``fparams``/``iparams`` rows
+consumed by the shared :func:`~repro.kernels.timeline.ref.timeline_step_dyn`.
+The sim axis is what gives this kernel something to amortize — a single
+sequential sim is better served by the scan reference (see the ``"auto"``
+dispatch note in ``ops.py``).
 """
 from __future__ import annotations
 
@@ -24,7 +35,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.timeline.ref import TimelineParams, timeline_step
+from repro.kernels.timeline.ref import (
+    PORT_POISON,
+    TimelineParams,
+    timeline_step,
+    timeline_step_dyn,
+)
 
 
 def _timeline_kernel(
@@ -65,6 +81,110 @@ def _timeline_kernel(
         return 0
 
     jax.lax.fori_loop(0, block, body, 0)
+
+
+def _timeline_batched_kernel(
+    a_ref, p_ref, bd_ref, bp_ref,   # int32 [B, BLK] ids
+    c_ref, th_ref, mh_ref,          # int32 [B, BLK] hit bits
+    pen_ref,                        # f32   [B, BLK] serialized penalty
+    fp_ref,                         # f32   [B, 8]  per-sim latency table
+    ip_ref,                         # int32 [B, 7]  per-sim flags/counts
+    lat_ref, ov_ref, done_ref,      # f32   [B, BLK] outputs
+    acc_scr, mshr_scr, cnt_scr, port_scr, bank_scr,  # stacked VMEM state
+    *,
+    block: int,
+    num_sims: int,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        mshr_scr[...] = jnp.zeros_like(mshr_scr)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+        # Port columns beyond each sim's own tlb_ports are poisoned as
+        # always-busy so the earliest-free argmin never selects them (the
+        # exact init of ref.timeline_init_state_batched).
+        col = jax.lax.broadcasted_iota(jnp.int32, port_scr.shape, 2)
+        port_scr[...] = jnp.where(col < ip_ref[:, 5][:, None, None],
+                                  jnp.float32(0.0), jnp.float32(PORT_POISON))
+        bank_scr[...] = jnp.zeros_like(bank_scr)
+
+    def body(j, _):
+        def per_sim(b, _):
+            state = (acc_scr[b], mshr_scr[b], cnt_scr[b],
+                     port_scr[b], bank_scr[b])
+            inp = (a_ref[b, j], p_ref[b, j], bd_ref[b, j], bp_ref[b, j],
+                   c_ref[b, j], th_ref[b, j], mh_ref[b, j], pen_ref[b, j])
+            (acc, mshr, cnt, port, bank), (lat, ov, done) = timeline_step_dyn(
+                state, inp, fp_ref[b], ip_ref[b])
+            acc_scr[b] = acc
+            mshr_scr[b] = mshr
+            cnt_scr[b] = cnt
+            port_scr[b] = port
+            bank_scr[b] = bank
+            lat_ref[b, j] = lat
+            ov_ref[b, j] = ov
+            done_ref[b, j] = done
+            return 0
+
+        jax.lax.fori_loop(0, num_sims, per_sim, 0)
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("envelope", "block", "interpret"))
+def timeline_sim_batched_pallas(
+    accel: jnp.ndarray,      # int32 [B, N]
+    part: jnp.ndarray,
+    bank_data: jnp.ndarray,
+    bank_pte: jnp.ndarray,
+    cache_hit: jnp.ndarray,
+    tlb_hit: jnp.ndarray,
+    mem_hit: jnp.ndarray,
+    pen: jnp.ndarray,        # f32 [B, N]
+    fparams: jnp.ndarray,    # f32 [B, 8]
+    iparams: jnp.ndarray,    # int32 [B, 7]
+    envelope,                # (A, M, P, T, D) resource envelope
+    *,
+    block: int = 512,
+    interpret: bool = False,
+):
+    """B-sim batched timeline simulation: every sim's queueing state is
+    stacked on the leading VMEM scratch axis and each grid step streams one
+    trace block (all sims' per-access columns) HBM->VMEM once.  Returns
+    (latency, overhead, done), each f32 [B, N]; per sim bit-identical to
+    :func:`timeline_sim_pallas` / the scan reference on that sim's own
+    configuration (they all run one shared step)."""
+    B, n = accel.shape
+    A, M, P, T, D = envelope
+    block = min(block, n)
+    assert n % block == 0, f"trace length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    stream = pl.BlockSpec((B, block), lambda i: (0, i))
+    whole = lambda c: pl.BlockSpec((B, c), lambda i: (0, 0))
+    outs = pl.pallas_call(
+        functools.partial(_timeline_batched_kernel, block=block, num_sims=B),
+        grid=grid,
+        in_specs=[stream] * 8 + [whole(8), whole(7)],
+        out_specs=[stream] * 3,
+        out_shape=[jax.ShapeDtypeStruct((B, n), jnp.float32)] * 3,
+        scratch_shapes=[
+            pltpu.VMEM((B, A), jnp.float32),
+            pltpu.VMEM((B, A, M), jnp.float32),
+            pltpu.VMEM((B, A), jnp.int32),
+            pltpu.VMEM((B, P, T), jnp.float32),
+            pltpu.VMEM((B, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(accel.astype(jnp.int32), part.astype(jnp.int32),
+      bank_data.astype(jnp.int32), bank_pte.astype(jnp.int32),
+      cache_hit.astype(jnp.int32), tlb_hit.astype(jnp.int32),
+      mem_hit.astype(jnp.int32), pen.astype(jnp.float32),
+      fparams.astype(jnp.float32), iparams.astype(jnp.int32))
+    return tuple(outs)
 
 
 @functools.partial(jax.jit, static_argnames=("params", "block", "interpret"))

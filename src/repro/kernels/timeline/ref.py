@@ -37,6 +37,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class TimelineParams(NamedTuple):
@@ -185,6 +186,196 @@ def timeline_step(state, inp, p: TimelineParams):
     acc_next = acc_next.at[a].set(issue + p.issue_interval)
     return (acc_next, mshr_ring, mshr_cnt, port_free, bank_free), (
         latency, overhead, done)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-simulation path: per-sim parameters become *data*.
+# ---------------------------------------------------------------------------
+#
+# ``sweep_timeline`` (repro.core.timeline) stacks B heterogeneous simulations
+# (mixed designs, accelerator counts, resource bounds, trace lengths) on a
+# leading sim axis and advances all of them per trace element.  The static
+# Python branches of :func:`timeline_step` (``if p.serial_walk`` / ``if
+# p.mshrs > 0``) cannot be vmapped across sims that disagree on them, so
+# :func:`timeline_step_dyn` re-expresses the same step with the per-sim
+# configuration as two packed *traced* rows:
+#
+# * ``fp`` float32 [8]  — ``FP_COLS``: the latency table (plus ``walk2``, the
+#   host-precomputed ``float32(2.0 * t_net)`` so the conventional walk's
+#   round-trip term is rounded exactly like the oracle's Python-float fold).
+# * ``ip`` int32   [7]  — ``IP_COLS``: design flags + resource counts.
+#
+# State arrays are padded to the batch's common resource envelope.  Padding is
+# *poisoned* exactly like the PR-1 TLB sweep so it can never be observed:
+#
+# * MSHR slots / DRAM banks beyond a sim's own count are never indexed (slot
+#   ids come from ``cnt % mshrs`` and per-sim bank ids are ``< dram_banks``),
+#   so they stay at their always-free initial 0.
+# * TLB-port columns beyond a sim's own ``tlb_ports`` are initialised to
+#   ``PORT_POISON`` (~f32 max): the earliest-free ``argmin`` can never select
+#   them, so the chosen port index — and hence every wait — matches the
+#   oracle's own-width ``argmin`` bit-exactly.
+#
+# Every jnp.where selects between expressions computed in the oracle's exact
+# float32 operation order, so per-sim outputs are bit-identical to
+# :func:`timeline_step` on that sim's own configuration
+# (tests/test_timeline_sweep.py asserts this across heterogeneous batches).
+
+FP_COLS = ("l_cache", "l_tlb", "l_dram", "t_net", "walk2", "tlb_occ",
+           "dram_occ", "issue_interval")
+IP_COLS = ("serial_walk", "mem_tlb", "num_accels", "mshrs", "num_partitions",
+           "tlb_ports", "dram_banks")
+
+PORT_POISON = 3.0e38  # ~f32 max: argmin never selects a padded port column
+
+
+def pack_params(p: TimelineParams):
+    """(fp float32 [8], ip int32 [7]) rows for one sim's configuration."""
+    fp = np.array([p.l_cache, p.l_tlb, p.l_dram, p.t_net,
+                   np.float32(2.0 * p.t_net), p.tlb_occ, p.dram_occ,
+                   p.issue_interval], np.float32)
+    ip = np.array([int(p.serial_walk), int(p.mem_tlb), p.num_accels, p.mshrs,
+                   p.num_partitions, p.tlb_ports, p.dram_banks], np.int32)
+    return fp, ip
+
+
+def timeline_init_state_batched(B: int, envelope, tlb_ports: jnp.ndarray):
+    """Stacked all-zero queueing state on the (A, M, P, T, D) resource
+    envelope, with port columns beyond each sim's own ``tlb_ports`` poisoned
+    as always-busy (see module notes above)."""
+    A, M, P, T, D = envelope
+    col = jax.lax.broadcasted_iota(jnp.int32, (B, P, T), 2)
+    port0 = jnp.where(col < tlb_ports[:, None, None],
+                      jnp.float32(0.0), jnp.float32(PORT_POISON))
+    return (
+        jnp.zeros((B, A), jnp.float32),
+        jnp.zeros((B, A, M), jnp.float32),
+        jnp.zeros((B, A), jnp.int32),
+        port0,
+        jnp.zeros((B, D), jnp.float32),
+    )
+
+
+def _masked_set(arr, mask, value):
+    """Dense equivalent of ``arr.at[idx].set(value)`` (``mask`` one-hot at
+    idx): identical result, but vmapping it over sims yields wide
+    compare/selects instead of batched scatters — the latter are the
+    dominant cost of the batched scan on CPU backends."""
+    return jnp.where(mask, value, arr)
+
+
+def timeline_step_dyn(state, inp, fp, ip):
+    """One sim's :func:`timeline_step` with traced per-sim parameters and
+    envelope-padded state.  Shared by the batched ``lax.scan`` reference
+    (vmapped over sims) and the batched Pallas kernel (fori over sims), so
+    those two paths are bit-identical by construction — and each sim is
+    bit-identical to the static-param oracle on its own configuration."""
+    acc_next, mshr_ring, mshr_cnt, port_free, bank_free = state
+    a, part, bank_d, bank_p, c, th, mh, pen = inp
+    l_cache, l_tlb, l_dram, t_net = fp[0], fp[1], fp[2], fp[3]
+    walk2, tlb_occ, dram_occ, issue_iv = fp[4], fp[5], fp[6], fp[7]
+    serial, memtlb = ip[0] != 0, ip[1] != 0
+    mshrs, ports, banks = ip[3], ip[5], ip[6]
+    zero = jnp.float32(0.0)
+    c_hit = c != 0
+    nominal = acc_next[a]
+
+    accel_ix = jax.lax.iota(jnp.int32, acc_next.shape[0])
+    bank_ix = jax.lax.iota(jnp.int32, bank_free.shape[0])
+
+    # --- MSHR admission (slot ids never reach padded columns) ---------------
+    slot = mshr_cnt[a] % jnp.maximum(mshrs, 1)
+    w_mshr = jnp.maximum(mshr_ring[a, slot] - nominal, zero)
+    use_mshr = (~c_hit) & (mshrs > 0)
+    issue = nominal + jnp.where(use_mshr, w_mshr, zero)
+
+    t0 = issue + l_cache
+
+    # --- SPARTA port queue (poisoned columns lose every argmin) -------------
+    arr = t0 + t_net
+    row = port_free[part]
+    pslot = jnp.argmin(row)
+    w_port = jnp.where(ports > 0, jnp.maximum(row[pslot] - arr, zero), zero)
+    do_port = memtlb & (~c_hit) & (ports > 0)
+    port_mask = (
+        (jax.lax.broadcasted_iota(jnp.int32, port_free.shape, 0) == part)
+        & (jax.lax.broadcasted_iota(jnp.int32, port_free.shape, 1) == pslot))
+    port_free = _masked_set(port_free, port_mask & do_port,
+                            arr + w_port + tlb_occ)
+    probe_done = arr + w_port + l_tlb
+
+    # --- translation-path DRAM reference (conv walk / SPARTA PTE read) ------
+    walk_arr = t0 + l_tlb + t_net
+    trans_arr = jnp.where(serial, walk_arr, probe_done)
+    w_tr = jnp.where(banks > 0,
+                     jnp.maximum(bank_free[bank_p] - trans_arr, zero), zero)
+    do_tr = (~c_hit) & (banks > 0) & jnp.where(
+        serial, th == 0, memtlb & (mh == 0))
+    bank_free = _masked_set(bank_free, (bank_ix == bank_p) & do_tr,
+                            trans_arr + w_tr + dram_occ)
+
+    walk = walk2 + w_tr + l_dram
+    trans_conv = l_tlb + jnp.where(th != 0, zero, walk)
+    trans_sparta = w_port + l_tlb + jnp.where(mh != 0, zero, w_tr + l_dram)
+    trans = jnp.where(serial, trans_conv, jnp.where(memtlb, trans_sparta, pen))
+    data_arr = jnp.where(serial, t0 + trans_conv + t_net,
+                         jnp.where(memtlb, arr + trans_sparta, arr))
+    pen_eff = jnp.where(serial | memtlb, zero, pen)
+
+    # --- data DRAM access (all designs) -------------------------------------
+    w_data = jnp.where(banks > 0,
+                       jnp.maximum(bank_free[bank_d] - data_arr, zero), zero)
+    bank_free = _masked_set(bank_free,
+                            (bank_ix == bank_d) & (~c_hit) & (banks > 0),
+                            data_arr + w_data + dram_occ + pen_eff)
+
+    lat_conv = l_cache + trans_conv + t_net + w_data + l_dram + t_net
+    lat_sparta = l_cache + t_net + trans_sparta + w_data + l_dram + t_net
+    lat_over = l_cache + t_net + w_data + l_dram + pen_eff + t_net
+    lat_miss = jnp.where(serial, lat_conv,
+                         jnp.where(memtlb, lat_sparta, lat_over))
+    latency = jnp.where(c_hit, l_cache, lat_miss)
+    overhead = jnp.where(c_hit, zero, trans)
+    done = issue + latency
+
+    # --- state updates -------------------------------------------------------
+    mshr_mask = (
+        (jax.lax.broadcasted_iota(jnp.int32, mshr_ring.shape, 0) == a)
+        & (jax.lax.broadcasted_iota(jnp.int32, mshr_ring.shape, 1) == slot))
+    mshr_ring = _masked_set(mshr_ring, mshr_mask & use_mshr, done)
+    mshr_cnt = mshr_cnt + jnp.where((accel_ix == a) & use_mshr, 1, 0)
+    acc_next = _masked_set(acc_next, accel_ix == a, issue + issue_iv)
+    return (acc_next, mshr_ring, mshr_cnt, port_free, bank_free), (
+        latency, overhead, done)
+
+
+@functools.partial(jax.jit, static_argnames=("envelope",))
+def timeline_scan_batched_ref(
+    accel: jnp.ndarray,      # int32 [B, N]
+    part: jnp.ndarray,       # int32 [B, N]
+    bank_data: jnp.ndarray,  # int32 [B, N]
+    bank_pte: jnp.ndarray,   # int32 [B, N]
+    cache_hit: jnp.ndarray,  # int32 [B, N]
+    tlb_hit: jnp.ndarray,    # int32 [B, N]
+    mem_hit: jnp.ndarray,    # int32 [B, N]
+    pen: jnp.ndarray,        # f32   [B, N]
+    fparams: jnp.ndarray,    # f32   [B, 8]  (FP_COLS)
+    iparams: jnp.ndarray,    # int32 [B, 7]  (IP_COLS)
+    envelope: Tuple[int, int, int, int, int],   # (A, M, P, T, D)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """All B sims advanced per trace element in ONE ``lax.scan``; returns
+    (latency, overhead, done), each f32 [B, N]."""
+    B = accel.shape[0]
+    state0 = timeline_init_state_batched(B, envelope, iparams[:, 5])
+    vstep = jax.vmap(timeline_step_dyn, in_axes=(0, 0, 0, 0))
+
+    def step(state, inp):
+        return vstep(state, inp, fparams, iparams)
+
+    xs = tuple(x.T for x in (accel, part, bank_data, bank_pte,
+                             cache_hit, tlb_hit, mem_hit, pen))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return tuple(y.T for y in ys)
 
 
 @functools.partial(jax.jit, static_argnames=("params",))

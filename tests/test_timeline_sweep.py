@@ -1,0 +1,240 @@
+"""Oracle-equivalence for the batched timeline engine (sweep_timeline).
+
+The per-sim :func:`repro.core.timeline.simulate_timeline` is the reference
+path; every ``sweep_timeline`` result must match it **bit-exactly** across
+heterogeneous envelopes — mixed designs, accelerator counts,
+bounded/unbounded resources, partition counts, page sizes and *unequal trace
+lengths* — on both the batched ``lax.scan`` and the batched Pallas
+(interpret) backends.  A padding-poisoning property test asserts that a
+sim's outputs are independent of how much envelope/trace padding its
+batch-mates force on it.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.core import timeline, traces
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.sweep import sweep_system
+from repro.core.timeline import TimelineConfig, TimelineSpec, sweep_timeline
+from repro.core.tlbsim import SystemSimConfig
+from repro.kernels.timeline import resolve_timeline_mode, timeline_sim
+from repro.kernels.timeline.ref import TimelineParams
+
+LAT = SystemLatencies()
+CACHE = TLBConfig(entries=256, ways=4)
+MEM_TLB = TLBConfig(entries=128, ways=4)
+
+
+def _events(lines, num_partitions=32, accel_tlb=None, page_shift=12):
+    return sweep_system(lines, [SystemSimConfig(
+        cache=CACHE, accel_tlb=accel_tlb, mem_tlb=MEM_TLB,
+        num_partitions=num_partitions, page_shift=page_shift)])[0]
+
+
+def _reference(sp: TimelineSpec):
+    """The per-sim oracle run of one spec."""
+    return timeline.simulate_timeline(
+        sp.lines, sp.events, sp.design, sp.lat or LAT, cfg=sp.cfg,
+        num_partitions=sp.num_partitions, page_shift=sp.page_shift,
+        num_accelerators=sp.num_accelerators, accel_ids=sp.accel_ids,
+        workload=sp.workload, way_accuracy=sp.way_accuracy,
+        kernel_mode="reference")
+
+
+def _assert_bit_identical(got, want, ctx=""):
+    for k in ("latency", "overhead", "done"):
+        a, b = getattr(got, k), getattr(want, k)
+        assert np.array_equal(a, b), (ctx, k, np.abs(a - b).max())
+
+
+def _heterogeneous_specs(seed: int):
+    """Mixed designs / accel counts / resource bounds / trace lengths."""
+    rng = np.random.default_rng(seed)
+    tr_a = traces.generate("bst_external", n_ops=350, max_accesses=2600)
+    tr_b = traces.generate("hash_table", n_ops=250, max_accesses=1700)
+    lines_c = rng.integers(0, 1 << 26, 900).astype(np.int64)
+    ev_conv = _events(tr_a.lines, num_partitions=1,
+                      accel_tlb=TLBConfig(entries=128, ways=4))
+    ev_sparta = _events(tr_a.lines, num_partitions=32)
+    ev_b = _events(tr_b.lines, num_partitions=8)
+    ev_c = _events(lines_c, num_partitions=4, page_shift=21)
+    return [
+        TimelineSpec(tr_a.lines, ev_conv, "conventional",
+                     cfg=TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16),
+                     num_accelerators=4),
+        TimelineSpec(tr_a.lines, ev_sparta, "sparta",
+                     cfg=TimelineConfig(mshrs=4, tlb_ports=2, dram_banks=8),
+                     num_partitions=32, num_accelerators=2),
+        TimelineSpec(tr_b.lines, ev_b, "sparta",
+                     cfg=TimelineConfig.unbounded(),  # no queueing anywhere
+                     num_partitions=8, num_accelerators=16),
+        TimelineSpec(tr_b.lines, ev_b, "dipta", workload="hash_table",
+                     cfg=TimelineConfig(mshrs=2, tlb_ports=0, dram_banks=4)),
+        TimelineSpec(lines_c, ev_c, "ideal", page_shift=21,
+                     cfg=TimelineConfig(mshrs=1, tlb_ports=0, dram_banks=2),
+                     num_accelerators=8),
+    ]
+
+
+@settings(deadline=None, max_examples=3)
+@given(st.integers(0, 10_000))
+def test_sweep_timeline_bitexact_vs_oracle(seed):
+    specs = _heterogeneous_specs(seed)
+    res = sweep_timeline(specs, LAT, kernel_mode="reference")
+    assert len(res) == len(specs)
+    for i, sp in enumerate(specs):
+        ref = _reference(sp)
+        assert res[i].latency.shape == (sp.lines.shape[0],)
+        _assert_bit_identical(res[i], ref, ctx=(i, sp.design))
+        assert res[i].n_warm == ref.n_warm
+        # Derived reductions ride along exactly.
+        assert res[i].mean_latency == ref.mean_latency
+        assert res[i].overhead_percentile(99) == ref.overhead_percentile(99)
+
+
+def test_sweep_timeline_pallas_interpret_matches_reference():
+    specs = _heterogeneous_specs(3)
+    ref = sweep_timeline(specs, LAT, kernel_mode="reference")
+    pal = sweep_timeline(specs, LAT, kernel_mode="pallas_interpret", block=256)
+    for i in range(len(specs)):
+        _assert_bit_identical(pal[i], ref[i], ctx=i)
+
+
+def test_sweep_timeline_vmem_chunking(monkeypatch):
+    """A tight VMEM budget splits the sim axis into chunks — results
+    unchanged, every sim lands in exactly one chunk."""
+    monkeypatch.setattr(timeline, "_VMEM_STATE_BUDGET_BYTES", 48 * 1024)
+    specs = _heterogeneous_specs(5)
+    dims = [(sp.num_accelerators, max(sp.cfg.mshrs, 1),
+             max(sp.num_partitions if sp.design == "sparta" else 1, 1),
+             max(sp.cfg.tlb_ports, 1), max(sp.cfg.dram_banks, 1))
+            for sp in specs]
+    chunks = timeline._timeline_vmem_chunks(dims, block=256)
+    assert len(chunks) > 1  # the budget actually forces a split
+    assert sorted(i for c in chunks for i in c) == list(range(len(specs)))
+    ref = sweep_timeline(specs, LAT, kernel_mode="reference")
+    pal = sweep_timeline(specs, LAT, kernel_mode="pallas_interpret", block=256)
+    for i in range(len(specs)):
+        _assert_bit_identical(pal[i], ref[i], ctx=i)
+
+
+@settings(deadline=None, max_examples=4)
+@given(st.integers(0, 10_000), st.sampled_from([1, 317, 900]))
+def test_padding_poisoning_is_unobservable(seed, cut):
+    """The property behind the batching discipline: a sim's outputs do not
+    depend on its batch-mates.  A short sim (trace cut to ``cut`` accesses,
+    small resources) is padded up to whatever envelope the largest mate
+    forces — trailing poisoned cache hits, poisoned port columns, untouched
+    MSHR/bank slots — and must come out bit-identical to its solo run."""
+    rng = np.random.default_rng(seed)
+    lines = rng.integers(0, 1 << 24, 900).astype(np.int64)
+    short_lines = lines[:cut]
+    ev_short = _events(short_lines, num_partitions=2)
+    short = TimelineSpec(short_lines, ev_short, "sparta",
+                         cfg=TimelineConfig(mshrs=2, tlb_ports=1, dram_banks=4),
+                         num_partitions=2, num_accelerators=2)
+    big = TimelineSpec(lines, _events(lines, num_partitions=64), "sparta",
+                       cfg=TimelineConfig(mshrs=16, tlb_ports=4, dram_banks=32),
+                       num_partitions=64, num_accelerators=16)
+    solo = _reference(short)
+    for batch in ([short], [short, big], [big, short, big]):
+        res = sweep_timeline(batch, LAT, kernel_mode="reference")
+        got = res[batch.index(short)]
+        _assert_bit_identical(got, solo, ctx=("batch-size", len(batch)))
+
+
+def test_sweep_timeline_rejects_empty_and_missing_lat():
+    with pytest.raises(ValueError, match="at least one"):
+        sweep_timeline([], LAT)
+    lines = np.arange(64, dtype=np.int64)
+    sp = TimelineSpec(lines, _events(lines), "ideal")
+    with pytest.raises(ValueError, match="lat"):
+        sweep_timeline([sp])  # no sweep-level lat, no per-spec lat
+    # Per-spec lat alone is fine.
+    sweep_timeline([TimelineSpec(lines, _events(lines), "ideal", lat=LAT)])
+
+
+def test_timeline_rejects_sweep_only_modes():
+    """No silent coercion: sweep-only backends raise, naming the valid
+    timeline modes (the old fig11 behaviour mapped "stackdist" -> "auto")."""
+    lines = np.arange(128, dtype=np.int64)
+    ev = _events(lines)
+    sp = TimelineSpec(lines, ev, "ideal")
+    for call in (
+        lambda: sweep_timeline([sp], LAT, kernel_mode="stackdist"),
+        lambda: timeline.simulate_timeline(lines, ev, "ideal", LAT,
+                                           kernel_mode="stackdist"),
+    ):
+        with pytest.raises(ValueError, match="stackdist.*timeline"):
+            call()
+    with pytest.raises(ValueError):
+        resolve_timeline_mode("bogus")
+
+
+def test_auto_mode_is_batch_aware(monkeypatch):
+    """The degenerate batch (1 sim) never auto-selects the Pallas path — a
+    single sequential sim gives the kernel nothing to amortize (the measured
+    0.87x BENCH_sweep.json regression) — while multi-sim batches auto-select
+    the batched kernel on TPU backends.  Explicit modes are honoured."""
+    import repro.kernels.common as kc
+
+    for backend in ("cpu", "tpu"):
+        monkeypatch.setattr(kc.jax, "default_backend", lambda b=backend: b)
+        assert resolve_timeline_mode("auto", batch=1) == "reference"
+    assert resolve_timeline_mode("auto", batch=8) == "pallas"  # still "tpu"
+    monkeypatch.setattr(kc.jax, "default_backend", lambda: "cpu")
+    assert resolve_timeline_mode("auto", batch=8) == "reference"
+    assert resolve_timeline_mode("pallas", batch=1) == "pallas"
+    assert resolve_timeline_mode("pallas_interpret", batch=8) == "pallas_interpret"
+
+
+def test_single_sim_auto_runs_reference_even_if_kernel_breaks(monkeypatch):
+    """simulate_timeline(kernel_mode="auto") must never reach the Pallas
+    path for its single sequential sim, whatever the backend."""
+    import repro.kernels.timeline.ops as ops
+
+    monkeypatch.setattr(
+        ops, "timeline_sim_pallas",
+        lambda *a, **k: pytest.fail("auto selected the single-sim Pallas path"))
+    lines = np.arange(256, dtype=np.int64) * 64
+    ev = _events(lines)
+    timeline.simulate_timeline(lines, ev, "sparta", LAT, num_partitions=32,
+                               kernel_mode="auto")
+
+
+def test_batched_engine_single_scan(monkeypatch):
+    """sweep_timeline invokes ONE batched scan per sweep — never the per-sim
+    scan — however many sims ride along (the fig11 property)."""
+    import repro.kernels.timeline.ops as ops
+    from repro.kernels.timeline import ref as tlref
+
+    calls = {"batched": 0}
+    real = tlref.timeline_scan_batched_ref
+
+    def counting(*a, **k):
+        calls["batched"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(ops, "timeline_scan_batched_ref", counting)
+    monkeypatch.setattr(
+        ops, "timeline_scan_ref",
+        lambda *a, **k: pytest.fail("per-sim scan used inside sweep_timeline"))
+    specs = _heterogeneous_specs(1)
+    sweep_timeline(specs, LAT, kernel_mode="reference")
+    assert calls["batched"] == 1
+
+
+def test_pack_params_roundtrip():
+    """The packed rows carry exactly the step's parameterisation, including
+    the pre-rounded conventional walk round-trip term."""
+    from repro.kernels.timeline import pack_params
+
+    p = TimelineParams(serial_walk=True, num_accels=3, mshrs=5,
+                       num_partitions=7, tlb_ports=2, dram_banks=9,
+                       l_cache=2.0, l_tlb=3.0, l_dram=111.0, t_net=390.5,
+                       tlb_occ=4.0, dram_occ=100.0, issue_interval=2.0)
+    fp, ip = pack_params(p)
+    assert fp.dtype == np.float32 and ip.dtype == np.int32
+    assert fp[4] == np.float32(2.0 * 390.5)
+    assert list(ip) == [1, 0, 3, 5, 7, 2, 9]
