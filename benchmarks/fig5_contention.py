@@ -67,14 +67,17 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
 
     # --- timeline half: queueing cost of contention at max threads ----------
     # The miss-ratio grid above is what sweep-only modes ("stackdist") are
-    # for; the timeline engine has its own backends, so fall back to "auto"
-    # for it — loudly, not silently — rather than discarding the whole
-    # figure.  (fig11, a pure-timeline figure, rejects such modes instead.)
+    # for; the joint system sweep and the timeline engine have their own
+    # backends (both reject "stackdist" with a ValueError), so fall back to
+    # "auto" for them — loudly, not silently — rather than discarding the
+    # whole figure.  (fig9/fig10/fig11, pure joint-sweep/timeline figures,
+    # reject such modes instead.)
     tl_mode = kernel_mode
     if kernel_mode == "stackdist":
         tl_mode = "auto"
         print(f"  (fig5 timeline half: kernel_mode={kernel_mode!r} is "
-              f"sweep-only; running the timeline half with 'auto')")
+              f"sweep_tlb-only; running the system sweep + timeline half "
+              f"with 'auto')")
     lat = SystemLatencies(n_sockets=8)
     tl_specs = []
     for w in W4:
@@ -83,7 +86,7 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
             SystemSimConfig(cache=CACHE, accel_tlb=None, mem_tlb=TLB,
                             num_partitions=p, page_shift=12)
             for p in PARTS
-        ], kernel_mode=kernel_mode)
+        ], kernel_mode=tl_mode)
         for i_p, p in enumerate(PARTS):
             tl_specs.append(timeline.TimelineSpec(
                 sl, evs[i_p], "sparta", cfg=QUEUES, num_partitions=p,

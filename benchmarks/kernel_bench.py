@@ -151,6 +151,7 @@ def run(quick: bool = False):
     _sweep_bench(quick)
     _timeline_bench(quick)
     _timeline_batched_bench(quick)
+    _system_batched_bench(quick)
     check_bench_history()
     return []
 
@@ -398,6 +399,107 @@ def _timeline_batched_bench(quick: bool):
     _append_bench_entry(entry)
 
 
+def _system_batched_bench(quick: bool):
+    """fig10-scale joint system sweep: the looped per-config reference (one
+    ``simulate_system`` scan per design point) vs ``sweep_system``'s single
+    batched scan vs the batched 3-structure Pallas kernel
+    (``repro.kernels.system_sim``), appended to BENCH_sweep.json.
+
+    The config matrix is the fig10 design grid (4K/2M pages x partition
+    counts x cache/accel-TLB presence — a heterogeneous 9-point batch, every
+    envelope-padding axis exercised).  On this CPU container the Pallas path
+    runs under the interpreter (the ``mode`` field records which); all three
+    paths must stay bit-identical per config.
+    """
+    from repro.core import traces
+    from repro.core.sparta import TLBConfig
+    from repro.core.sweep import sweep_system
+    from repro.core.tlbsim import SystemSimConfig, simulate_system
+
+    n_acc = 10_000 if quick else 60_000
+    tr = traces.generate("bst_external", n_ops=2 * n_acc // 5, max_accesses=n_acc)
+    cache = TLBConfig(entries=256, ways=4)
+    accel = TLBConfig(entries=128, ways=4)
+    mem = TLBConfig(entries=128, ways=4)
+    cfgs = [
+        SystemSimConfig(cache=cache, accel_tlb=accel, mem_tlb=mem,
+                        num_partitions=1, page_shift=12),
+        SystemSimConfig(cache=cache, accel_tlb=accel, mem_tlb=mem,
+                        num_partitions=1, page_shift=21),
+        SystemSimConfig(cache=cache, accel_tlb=None, mem_tlb=mem,
+                        num_partitions=8, page_shift=12),
+        SystemSimConfig(cache=cache, accel_tlb=None, mem_tlb=mem,
+                        num_partitions=8, page_shift=21),
+        SystemSimConfig(cache=cache, accel_tlb=None, mem_tlb=mem,
+                        num_partitions=32, page_shift=12),
+        SystemSimConfig(cache=cache, accel_tlb=None, mem_tlb=mem,
+                        num_partitions=32, page_shift=21),
+        SystemSimConfig(cache=cache, accel_tlb=None, mem_tlb=mem,
+                        num_partitions=128, page_shift=21),
+        SystemSimConfig(cache=None, accel_tlb=None, mem_tlb=mem,
+                        num_partitions=32, page_shift=12),
+        SystemSimConfig(cache=cache, accel_tlb=TLBConfig(entries=8, ways=4),
+                        mem_tlb=mem, num_partitions=8, page_shift=12,
+                        accel_probe_on_miss_only=False),
+    ]
+
+    def timed(fn):
+        best, res = None, None
+        for _ in range(2):
+            t0 = time.time()
+            res = fn()
+            t = time.time() - t0
+            best = t if best is None else min(best, t)
+        return best, res
+
+    pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
+    t_loop, ref = timed(lambda: [simulate_system(tr.lines, c) for c in cfgs])
+    t_bat, bat = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode="reference"))
+    t_pal, pal = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode=pallas_mode))
+
+    def identical(bev):
+        return bool(all(
+            np.array_equal(getattr(bev, k)[i], getattr(ev, k))
+            for i, ev in enumerate(ref)
+            for k in ("cache_hit", "accel_tlb_hit", "mem_tlb_hit")))
+
+    bit_identical = identical(bat)
+    pallas_identical = identical(pal)
+    entry = {
+        "written_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "bench": "system_batched",
+        "backend": jax.default_backend(),
+        "mode": pallas_mode,
+        "quick": quick,
+        "n_configs": len(cfgs),
+        "n_accesses": int(tr.num_accesses),
+        "t_looped_s": round(t_loop, 3),
+        "t_batched_s": round(t_bat, 3),
+        "t_pallas_s": round(t_pal, 3),
+        "speedup": round(t_loop / t_bat, 2),
+        "bit_identical": bit_identical and pallas_identical,
+    }
+    print_csv(
+        f"Batched system sweep ({len(cfgs)} configs x {tr.num_accesses} accesses)",
+        ["backend", "seconds", "vs_looped"],
+        [["looped reference (per-config scans)", t_loop, 1.0],
+         ["sweep_system (batched scan)", t_bat, t_loop / t_bat],
+         [f"sweep_system ({pallas_mode})", t_pal, t_loop / t_pal]],
+    )
+    print(f"  batched scan bit-identical to looped oracle: {bit_identical}")
+    print(f"  batched {pallas_mode} bit-identical to looped oracle: {pallas_identical}")
+    # Assert BEFORE recording (see _sweep_bench).
+    assert bit_identical, "sweep_system diverged from the per-config oracle"
+    assert pallas_identical, "batched system kernel diverged from the per-config oracle"
+    _append_bench_entry(entry)
+
+
+# Every engine the bench suite gates: ``--check`` fails when a bench has no
+# recorded row at all, so a silently-skipped engine (e.g. the system_batched
+# row added with the 3-structure kernel) cannot pass CI unverified.
+REQUIRED_BENCHES = ("sweep", "timeline", "timeline_batched", "system_batched")
+
+
 def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH) -> None:
     """Fail (the CI smoke step) if any recorded BENCH_sweep.json row reports
     a bit-identity violation — a perf number from a diverging backend is not
@@ -415,7 +517,15 @@ def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH) -> None:
             f"written_at={e.get('written_at')!r}" for i, e in bad)
         raise SystemExit(
             f"BENCH_sweep.json records {len(bad)} non-bit-identical row(s):\n{lines}")
-    print(f"  BENCH_sweep.json: all {len(hist)} recorded rows bit-identical")
+    seen = {e.get("bench", "sweep") for e in hist}
+    missing = [b for b in REQUIRED_BENCHES if b not in seen]
+    if missing:
+        raise SystemExit(
+            f"BENCH_sweep.json has no recorded row for bench(es) {missing}; "
+            f"run `python -m benchmarks.kernel_bench` so every engine's "
+            f"bit_identical field is on record")
+    print(f"  BENCH_sweep.json: all {len(hist)} recorded rows bit-identical "
+          f"({', '.join(REQUIRED_BENCHES)} covered)")
 
 
 if __name__ == "__main__":

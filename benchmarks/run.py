@@ -6,14 +6,16 @@ Prints per-figure CSVs, the checked claims, and the roofline summary table
 backend (auto/reference/pallas/pallas_interpret/stackdist) for the figures
 that run trace sweeps (fig4/5/8/9/10/11); ``stackdist`` is the exact
 sort-based stack-distance engine, which ``auto`` already prefers for the
-pure-LRU TLB sweeps (fig4/fig5/fig8) — see EXPERIMENTS.md.  fig11 is the
-beyond-paper tail-latency figure driven by the batched cycle-approximate
-timeline engine (``repro.core.timeline.sweep_timeline``), which rejects
-sweep-only modes such as ``stackdist`` with a ValueError naming its valid
-backends (no silent coercion) — run fig11 with ``auto`` or ``--only`` the
-sweep figures.  fig5 is a hybrid: its miss-ratio grid threads the mode
-through (``stackdist`` applies), and its timeline half falls back to
-``auto`` for sweep-only modes with a printed notice."""
+pure-LRU TLB sweeps (fig4/fig5/fig8) — see EXPERIMENTS.md.  fig9/fig10 run
+the joint 3-structure system sweep (``repro.core.sweep.sweep_system``,
+batched scan or the ``repro.kernels.system_sim`` Pallas kernel) and fig11
+additionally the batched cycle-approximate timeline engine
+(``repro.core.timeline.sweep_timeline``); both engines reject sweep-only
+modes such as ``stackdist`` with a ValueError naming their valid backends
+(no silent coercion) — run those figures with ``auto`` or ``--only`` the
+pure-TLB sweep figures.  fig5 is a hybrid: its miss-ratio grid threads the
+mode through (``stackdist`` applies), and its system-sweep/timeline half
+falls back to ``auto`` for sweep-only modes with a printed notice."""
 from __future__ import annotations
 
 import argparse

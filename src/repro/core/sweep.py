@@ -32,18 +32,24 @@ path (tests/test_sweep.py asserts equivalence).
   trace blocks streamed HBM->VMEM once and shared by all configs).
 * ``"reference"`` — the pure-JAX batched scan, the bit-exactness oracle.
 
-The joint system sweep is not pure-LRU (cache-hit-conditional TLB probes
-break the stack-inclusion property) and always runs the batched JAX scan;
-the mode string is still validated so call sites can thread one
-``kernel_mode`` everywhere.
+The joint system sweep (:func:`sweep_system`) has the same two execution
+backends, minus ``"stackdist"``: it is not pure-LRU (cache-hit-conditional
+TLB probes break the stack-inclusion property), so requesting the
+stack-distance engine raises a ``ValueError`` instead of being silently
+ignored (the PR 4 policy).  Its Pallas backend is
+``repro.kernels.system_sim.system_sim_batched``: all THREE stacked LRU
+structures (cache, accel TLB, partitioned mem TLB) stay resident in VMEM
+scratch per config, each trace block streams HBM->VMEM once with all six
+(set, tag) key views, and per-config structure presence / probe policy ride
+along as data flags; the batched scan oracle lives in
+``repro.kernels.system_sim.ref`` (re-exported here as
+``_scan_system_batched``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -57,9 +63,10 @@ from repro.core.tlbsim import (
     _geom,
     _prepare_keys,
     _scan_tlb_batched,
-    padded_tlb_state,
 )
 from repro.kernels.common import SWEEP_MODES, resolve_mode
+from repro.kernels.system_sim import resolve_system_mode, system_sim_batched
+from repro.kernels.system_sim.ref import system_sim_batched_ref as _scan_system_batched
 
 __all__ = [
     "TLBSweepSpec",
@@ -317,66 +324,19 @@ class BatchedSystemEvents:
         )
 
 
-@functools.partial(jax.jit, static_argnames=("geom", "valid"))
-def _scan_system_batched(
-    inputs,   # 6 x int32 [B, N]: cache/accel/mem (set, tag) streams
-    flags,    # 3 x bool  [B]:    has_cache, has_accel, accel_on_miss_only
-    geom: Tuple[int, int, int, int, int, int],
-    valid: Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]],
-):
-    """Batched joint pipeline scan; per-config semantics identical to
-    :func:`repro.core.tlbsim._scan_system` (structure presence and the
-    virtual-cache probe policy become per-config data instead of static
-    Python flags)."""
-    (c_set, c_tag, a_set, a_tag, m_set, m_tag) = inputs
-    has_cache, has_accel, on_miss_only = flags
-    cs, cw, asets, aw, ms, mw = geom
-    B = c_set.shape[0]
-
-    state0 = (
-        *padded_tlb_state(B, cs, cw, valid[0]),
-        *padded_tlb_state(B, asets, aw, valid[1]),
-        *padded_tlb_state(B, ms, mw, valid[2]),
-    )
-
-    def probe(tags, last, s, t, now, do_update):
-        row_t = tags[s]
-        hit_vec = row_t == t
-        hit = jnp.any(hit_vec)
-        way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(last[s]))
-        tags = tags.at[s, way].set(jnp.where(do_update, t, tags[s, way]))
-        last = last.at[s, way].set(jnp.where(do_update, now, last[s, way]))
-        return tags, last, hit
-
-    def step_one(state_b, flags_b, inp_b, now):
-        ct, cl, at, al, mt, ml = state_b
-        has_c, has_a, miss_only = flags_b
-        cs_i, ctag_i, as_i, atag_i, ms_i, mtag_i = inp_b
-        ct, cl, c_raw = probe(ct, cl, cs_i, ctag_i, now, has_c)
-        c_hit = jnp.where(has_c, c_raw, jnp.bool_(False))
-        # Physical cache: accel TLB probed every access.  Virtual cache: only
-        # on cache misses (translation needed only to leave the accelerator).
-        do_a = jnp.where(miss_only, ~c_hit, jnp.bool_(True)) & has_a
-        at, al, a_raw = probe(at, al, as_i, atag_i, now, do_a)
-        a_hit = jnp.where(
-            has_a, jnp.where(do_a, a_raw, jnp.bool_(True)), jnp.bool_(False)
-        )
-        # Memory-side TLB sees only cache misses (hits never leave the accel).
-        mt, ml, m_raw = probe(mt, ml, ms_i, mtag_i, now, ~c_hit)
-        m_hit = jnp.where(~c_hit, m_raw, jnp.bool_(True))
-        return (ct, cl, at, al, mt, ml), (c_hit, a_hit, m_hit)
-
-    vstep = jax.vmap(step_one, in_axes=(0, 0, 0, None))
-
-    def step(state, inp):
-        *streams, now = inp
-        return vstep(state, flags, tuple(streams), now)
-
-    n = c_set.shape[1]
-    now = jnp.arange(1, n + 1, dtype=jnp.int32)
-    xs = tuple(x.T for x in inputs) + (now,)
-    (_, ys) = jax.lax.scan(step, state0, xs)
-    return tuple(y.T for y in ys)
+def _system_vmem_chunks(
+    dims: Sequence[Tuple[int, int, int, int, int, int]], *, block: int = 512
+) -> list:
+    """Joint-system instantiation of :func:`envelope_chunks`: per config the
+    stacked LRU state is ``2 x ((cs+1)*cw + (as+1)*aw + (ms+1)*mw)`` int32
+    words (tags + last-use for each of the three structures, each with one
+    extra set row because trace-tail padding accesses may get parked there)
+    and each config streams 7 x block words per grid step (six (set, tag) key
+    views in, one packed hit word out)."""
+    return envelope_chunks(
+        dims,
+        lambda g: 2 * ((g[0] + 1) * g[1] + (g[2] + 1) * g[3] + (g[4] + 1) * g[5]),
+        stream_words=7 * block, budget_bytes=_VMEM_STATE_BUDGET_BYTES)
 
 
 def _system_keys(lines: np.ndarray, cfg: SystemSimConfig):
@@ -401,6 +361,7 @@ def sweep_system(
     *,
     warmup_frac: float = 0.25,
     kernel_mode: str = "auto",
+    block: int = 512,
 ) -> BatchedSystemEvents:
     """Run the joint cache + accel-TLB + memory-TLB pipeline for every config
     in ONE pass over the line trace.
@@ -408,13 +369,14 @@ def sweep_system(
     Configs may differ in every dimension (cache/accel presence, geometries,
     partitions, page size, probe policy); results are bit-identical to
     calling :func:`repro.core.tlbsim.simulate_system` once per config.
+
+    ``kernel_mode`` selects the batched scan reference or the batched Pallas
+    kernel (``repro.kernels.system_sim``); ``"stackdist"`` raises (no exact
+    stack-distance execution exists for cache-hit-conditional probes).
     """
     if not cfgs:
         raise ValueError("sweep_system needs at least one config")
-    # Validated so call sites can thread one kernel_mode everywhere; the joint
-    # pipeline always runs the batched JAX scan ("stackdist" does not apply:
-    # cache-hit-conditional TLB probes break the LRU stack-inclusion property).
-    resolve_mode(kernel_mode, valid=SWEEP_MODES)
+    mode = resolve_system_mode(kernel_mode)
 
     streams = [np.stack(rows) for rows in zip(*(_system_keys(lines, c) for c in cfgs))]
 
@@ -424,24 +386,56 @@ def sweep_system(
     c_geo = [_geom(c.cache) for c in cfgs]
     a_geo = [_geom(c.accel_tlb) for c in cfgs]
     m_geo = [(_geom(c.mem_tlb)[0] * c.num_partitions, _geom(c.mem_tlb)[1]) for c in cfgs]
-    cs, cw, c_valid = envelope(c_geo)
-    asets, aw, a_valid = envelope(a_geo)
-    ms, mw, m_valid = envelope(m_geo)
 
-    flags = tuple(
-        jnp.asarray([f(c) for c in cfgs], jnp.bool_)
-        for f in (
-            lambda c: c.cache is not None,
-            lambda c: c.accel_tlb is not None,
-            lambda c: c.accel_probe_on_miss_only,
+    n = lines.shape[0]
+    n0 = int(n * warmup_frac)
+    if mode == "reference":
+        cs, cw, c_valid = envelope(c_geo)
+        asets, aw, a_valid = envelope(a_geo)
+        ms, mw, m_valid = envelope(m_geo)
+        flags = tuple(
+            jnp.asarray([f(c) for c in cfgs], jnp.bool_)
+            for f in (
+                lambda c: c.cache is not None,
+                lambda c: c.accel_tlb is not None,
+                lambda c: c.accel_probe_on_miss_only,
+            )
         )
-    )
-    ys = _scan_system_batched(
-        tuple(jnp.asarray(s) for s in streams),
-        flags,
-        (cs, cw, asets, aw, ms, mw),
-        (c_valid, a_valid, m_valid),
-    )
-    c_hit, a_hit, m_hit = (np.asarray(y) for y in ys)
-    n0 = int(lines.shape[0] * warmup_frac)
-    return BatchedSystemEvents(c_hit, a_hit, m_hit, n_warm=lines.shape[0] - n0)
+        ys = _scan_system_batched(
+            tuple(jnp.asarray(s) for s in streams),
+            flags,
+            (cs, cw, asets, aw, ms, mw),
+            (c_valid, a_valid, m_valid),
+        )
+        c_hit, a_hit, m_hit = (np.asarray(y) for y in ys)
+        return BatchedSystemEvents(c_hit, a_hit, m_hit, n_warm=n - n0)
+
+    # Pallas path: chunk the batch so each chunk's three-structure envelope
+    # fits the VMEM scratch budget, and pad the trace tail to whole blocks
+    # with accesses parked in an extra set row (index = envelope sets) that
+    # no real config ever indexes.
+    flags_np = np.asarray(
+        [[c.cache is not None, c.accel_tlb is not None, c.accel_probe_on_miss_only]
+         for c in cfgs], np.int32)
+    dims = [c_geo[i] + a_geo[i] + m_geo[i] for i in range(len(cfgs))]
+    blk = min(block, n)
+    pad = (-n) % blk
+    hits = [np.empty((len(cfgs), n), dtype=bool) for _ in range(3)]
+    for chunk in _system_vmem_chunks(dims, block=blk):
+        geom, valid, chunk_streams = [], [], []
+        for k, geos in enumerate((c_geo, a_geo, m_geo)):
+            sets = max(geos[i][0] for i in chunk)
+            ways = max(geos[i][1] for i in chunk)
+            s_c, t_c = streams[2 * k][chunk], streams[2 * k + 1][chunk]
+            if pad:
+                s_c = np.pad(s_c, ((0, 0), (0, pad)), constant_values=sets)
+                t_c = np.pad(t_c, ((0, 0), (0, pad)), constant_values=0)
+            geom += [sets + (1 if pad else 0), ways]
+            valid.append(tuple(geos[i][1] for i in chunk))
+            chunk_streams += [jnp.asarray(s_c), jnp.asarray(t_c)]
+        ys = system_sim_batched(
+            *chunk_streams, jnp.asarray(flags_np[chunk]),
+            tuple(geom), tuple(valid), block=blk, kernel_mode=mode)
+        for h, y in zip(hits, ys):
+            h[chunk] = np.asarray(y)[:, :n]
+    return BatchedSystemEvents(*hits, n_warm=n - n0)

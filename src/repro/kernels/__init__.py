@@ -5,5 +5,6 @@
 # Kernel packages: flash_attention, paged_attention, rwkv6_scan,
 # mamba2_scan, tlb_sim (sequential trace-sim scans), stackdist
 # (segmented LRU-stack scan powering the sort-based sweep backend),
-# timeline (cycle-approximate queueing scan for per-access latency).
+# timeline (cycle-approximate queueing scan for per-access latency),
+# system_sim (batched 3-structure joint cache/TLB pipeline scan).
 # Mode dispatch helpers live in common.py.

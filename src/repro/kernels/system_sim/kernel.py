@@ -1,0 +1,168 @@
+"""Batched joint-system (cache + accel TLB + mem TLB) trace simulation as a
+Pallas TPU kernel.
+
+Same architecture as ``repro.kernels.tlb_sim.tlb_sim_batched_pallas``, with
+THREE stacked LRU structures instead of one: every config's (tags, last-use)
+state for the data cache, the accelerator-side TLB, and the partitioned
+memory-side TLB array stays **resident in VMEM scratch** for the entire
+trace (TPU grids execute sequentially, so scratch persists across grid
+steps).  Each grid step streams one trace block HBM->VMEM once, carrying all
+six per-config (set, tag) key views of that chunk, and writes back a single
+packed hit word per access (bit 0 cache, bit 1 accel TLB, bit 2 mem TLB) —
+7 streamed words per (config, access).
+
+Per-config structure presence and the virtual-cache probe policy ride along
+as an int32 ``[B, 3]`` flag row (``has_cache``, ``has_accel``,
+``accel_probe_on_miss_only``) consumed as *data*, exactly like the batched
+scan oracle (:func:`repro.kernels.system_sim.ref.system_sim_batched_ref`):
+probes always execute, updates and hit bits are gated by the flags, so
+heterogeneous design points (cacheless accelerators, physical vs virtual
+caches) share one pallas_call.  Way padding beyond each config's own
+associativity is poisoned with the shared ``_POISON_TAG`` / ``_POISON_LAST``
+scheme, keeping the kernel bit-identical per config to the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Shared with the host-side batched oracle (via padded_tlb_state):
+# kernel/oracle bit-identity depends on both using the same poison scheme.
+from repro.core.tlbsim import _POISON_LAST, _POISON_TAG
+
+
+def _system_batched_kernel(
+    c_set_ref, c_tag_ref,   # int32 [B, BLK] cache (set, tag) views
+    a_set_ref, a_tag_ref,   # int32 [B, BLK] accel-TLB views
+    m_set_ref, m_tag_ref,   # int32 [B, BLK] mem-TLB views
+    flags_ref,              # int32 [B, 3]  (has_cache, has_accel, miss_only)
+    hit_ref,                # int32 [B, BLK] packed hit bits out
+    c_tags, c_last,         # [B, CS, CW] persistent stacked VMEM state
+    a_tags, a_last,         # [B, AS, AW]
+    m_tags, m_last,         # [B, MS, MW]
+    *,
+    block: int,
+    num_cfgs: int,
+    valid: Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]],
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # Poison ways beyond each config's associativity in each structure:
+        # their tag never matches and their last-use stamp is never the LRU
+        # minimum.  valid is static, so the per-config masks are compile-time
+        # constants, unrolled over the B axis (the tlb_sim kernel's scheme,
+        # three times over).
+        for tags_scr, last_scr, vws in (
+            (c_tags, c_last, valid[0]),
+            (a_tags, a_last, valid[1]),
+            (m_tags, m_last, valid[2]),
+        ):
+            way_ix = jax.lax.broadcasted_iota(jnp.int32, tags_scr.shape[1:], 1)
+            for b, vw in enumerate(vws):
+                pad = way_ix >= vw
+                tags_scr[b, :, :] = jnp.where(pad, _POISON_TAG, -1).astype(jnp.int32)
+                last_scr[b, :, :] = jnp.where(pad, _POISON_LAST, 0).astype(jnp.int32)
+
+    base = i * block
+
+    def access(j, _):
+        now = base + j + 1
+
+        def per_cfg(b, _):
+            has_c = flags_ref[b, 0] > 0
+            has_a = flags_ref[b, 1] > 0
+            miss_only = flags_ref[b, 2] > 0
+
+            def probe(tags_scr, last_scr, s, t, do_update):
+                row_t = tags_scr[b, s, :]
+                row_l = last_scr[b, s, :]
+                hit_vec = row_t == t
+                hit = jnp.any(hit_vec)
+                way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+                tags_scr[b, s, way] = jnp.where(do_update, t, tags_scr[b, s, way])
+                last_scr[b, s, way] = jnp.where(do_update, now, last_scr[b, s, way])
+                return hit
+
+            c_raw = probe(c_tags, c_last, c_set_ref[b, j], c_tag_ref[b, j], has_c)
+            c_hit = has_c & c_raw
+            # Physical cache: accel TLB probed every access.  Virtual cache:
+            # only on cache misses (translation needed only to leave the
+            # accelerator).
+            do_a = jnp.where(miss_only, ~c_hit, jnp.bool_(True)) & has_a
+            a_raw = probe(a_tags, a_last, a_set_ref[b, j], a_tag_ref[b, j], do_a)
+            a_hit = jnp.where(
+                has_a, jnp.where(do_a, a_raw, jnp.bool_(True)), jnp.bool_(False)
+            )
+            # Memory-side TLB sees only cache misses.
+            m_raw = probe(m_tags, m_last, m_set_ref[b, j], m_tag_ref[b, j], ~c_hit)
+            m_hit = jnp.where(~c_hit, m_raw, jnp.bool_(True))
+
+            hit_ref[b, j] = (
+                c_hit.astype(jnp.int32)
+                | (a_hit.astype(jnp.int32) << 1)
+                | (m_hit.astype(jnp.int32) << 2)
+            )
+            return 0
+
+        jax.lax.fori_loop(0, num_cfgs, per_cfg, 0)
+        return 0
+
+    jax.lax.fori_loop(0, block, access, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("geom", "valid", "block", "interpret"))
+def system_sim_batched_pallas(
+    c_set: jnp.ndarray, c_tag: jnp.ndarray,   # int32 [B, N]
+    a_set: jnp.ndarray, a_tag: jnp.ndarray,   # int32 [B, N]
+    m_set: jnp.ndarray, m_tag: jnp.ndarray,   # int32 [B, N]
+    flags: jnp.ndarray,                       # int32 [B, 3]
+    geom: Tuple[int, int, int, int, int, int],
+    valid: Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]],
+    *,
+    block: int = 512,
+    interpret: bool = False,
+):
+    """B-config batched joint-pipeline simulation; returns
+    (cache_hit, accel_tlb_hit, mem_tlb_hit), each bool [B, N], bit-identical
+    per config to the batched scan oracle on the same padded envelope."""
+    num_cfgs, n = c_set.shape
+    cs, cw, asets, aw, ms, mw = geom
+    assert all(len(v) == num_cfgs for v in valid)
+    block = min(block, n)
+    assert n % block == 0, f"trace length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    stream = pl.BlockSpec((num_cfgs, block), lambda i: (0, i))
+    hits = pl.pallas_call(
+        functools.partial(
+            _system_batched_kernel, block=block, num_cfgs=num_cfgs, valid=valid,
+        ),
+        grid=grid,
+        in_specs=[stream] * 6 + [pl.BlockSpec((num_cfgs, 3), lambda i: (0, 0))],
+        out_specs=stream,
+        out_shape=jax.ShapeDtypeStruct((num_cfgs, n), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((num_cfgs, cs, cw), jnp.int32),
+            pltpu.VMEM((num_cfgs, cs, cw), jnp.int32),
+            pltpu.VMEM((num_cfgs, asets, aw), jnp.int32),
+            pltpu.VMEM((num_cfgs, asets, aw), jnp.int32),
+            pltpu.VMEM((num_cfgs, ms, mw), jnp.int32),
+            pltpu.VMEM((num_cfgs, ms, mw), jnp.int32),
+        ],
+        interpret=interpret,
+    )(c_set.astype(jnp.int32), c_tag.astype(jnp.int32),
+      a_set.astype(jnp.int32), a_tag.astype(jnp.int32),
+      m_set.astype(jnp.int32), m_tag.astype(jnp.int32),
+      flags.astype(jnp.int32))
+    return (
+        (hits & 1).astype(bool),
+        ((hits >> 1) & 1).astype(bool),
+        ((hits >> 2) & 1).astype(bool),
+    )

@@ -1,0 +1,65 @@
+"""Public batched joint-system op with kernel-mode dispatch.
+
+Mode policy mirrors the timeline engine (PR 4): sweep-only backends are
+rejected loudly — the joint pipeline's cache-hit-conditional TLB probes break
+the LRU stack-inclusion property, so the exact stack-distance engine cannot
+serve it, and silently falling back would misreport which backend produced a
+figure.  ``"auto"`` resolves to the batched Pallas kernel on TPU backends and
+the batched scan reference elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.common import SWEEP_MODES, VALID_MODES, resolve_mode
+from repro.kernels.system_sim.kernel import system_sim_batched_pallas
+from repro.kernels.system_sim.ref import system_sim_batched_ref
+
+__all__ = ["system_sim_batched", "resolve_system_mode"]
+
+
+def resolve_system_mode(kernel_mode: str) -> str:
+    """Validate and resolve ``kernel_mode`` for the joint system sweep.
+
+    ``"stackdist"`` (and any future sweep-only backend) raises: stack
+    inclusion does not hold when TLB probes are conditional on cache hits, so
+    there is no exact stack-distance execution of the joint pipeline — no
+    silent coercion (the PR 4 policy that removed the timeline's).
+    """
+    if kernel_mode in SWEEP_MODES and kernel_mode not in VALID_MODES:
+        raise ValueError(
+            f"kernel_mode={kernel_mode!r} is a sweep_tlb/miss_ratio_curve-only "
+            f"backend: the joint system sweep's cache-hit-conditional TLB "
+            f"probes break the LRU stack-inclusion property, so the "
+            f"stack-distance engine cannot serve it; expected one of "
+            f"{VALID_MODES}")
+    return resolve_mode(kernel_mode)
+
+
+def system_sim_batched(
+    c_set: jnp.ndarray, c_tag: jnp.ndarray,   # int32 [B, N]
+    a_set: jnp.ndarray, a_tag: jnp.ndarray,   # int32 [B, N]
+    m_set: jnp.ndarray, m_tag: jnp.ndarray,   # int32 [B, N]
+    flags: jnp.ndarray,                       # int32 [B, 3]
+    geom: Tuple[int, int, int, int, int, int],
+    valid: Tuple[Tuple[int, ...], Tuple[int, ...], Tuple[int, ...]],
+    *,
+    block: int = 512,
+    kernel_mode: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched-config joint cache + accel-TLB + mem-TLB simulation (the
+    ``sweep_system`` hot loop): B configs' three LRU states advance together
+    through ONE pass over the trace.  Returns (cache_hit, accel_tlb_hit,
+    mem_tlb_hit) bool [B, N]; bit-identical per config to
+    :func:`repro.core.tlbsim.simulate_system` on that config's own (unpadded)
+    geometry."""
+    mode = resolve_system_mode(kernel_mode)
+    if mode == "reference":
+        bools = tuple(flags[:, c].astype(bool) for c in range(3))
+        return system_sim_batched_ref(
+            (c_set, c_tag, a_set, a_tag, m_set, m_tag), bools, geom, valid)
+    return system_sim_batched_pallas(
+        c_set, c_tag, a_set, a_tag, m_set, m_tag, flags, geom, valid,
+        block=block, interpret=(mode == "pallas_interpret"))

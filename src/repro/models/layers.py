@@ -59,15 +59,25 @@ def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
 
 
 def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: [..., T, H, D]; positions: broadcastable to [..., T]."""
+    """x: [..., T, H, D]; positions: broadcastable to [..., T].
+
+    The two rotated halves are joined with ``stack(..., axis=-2).reshape``
+    (row-major, so identical values to a last-axis concatenate) instead of
+    ``jnp.concatenate``: XLA's SPMD partitioner mispartitions a last-axis
+    concatenate whose operands carry a sharded head dim (as they do once
+    wq/wk/wv are tensor-sharded and the reshape propagates into
+    [B, T, H, hd]), silently corrupting sharded-vs-single-device runs — the
+    sharded-train-step equivalence test pins this.  The stack/reshape form is
+    bit-identical on a single device and partitions correctly.
+    """
     d = x.shape[-1]
     freqs = rope_freqs(d, theta)                                 # [D/2]
     angles = positions[..., None].astype(jnp.float32) * freqs    # [..., T, D/2]
     cos = jnp.cos(angles)[..., None, :]                          # [..., T, 1, D/2]
     sin = jnp.sin(angles)[..., None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
-    return out.astype(x.dtype)
+    out = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-2)
+    return out.reshape(x.shape).astype(x.dtype)
 
 
 # -- MLP --------------------------------------------------------------------

@@ -223,13 +223,13 @@ def test_mode_registry():
     with pytest.raises(ValueError, match="kernel_mode"):
         tlb_sim(np.zeros(4, np.int32), np.zeros(4, np.int32), 4, 2,
                 kernel_mode="stackdist")
-    # The joint system sweep validates-and-ignores it (not pure-LRU).
+    # The joint system sweep rejects it loudly (not pure-LRU: cache-hit-
+    # conditional probes break stack inclusion) — PR 4 policy, no coercion.
     lines = np.random.default_rng(0).integers(0, 1 << 20, 500).astype(np.int64)
     from repro.core.sweep import sweep_system
     from repro.core.tlbsim import SystemSimConfig
-    a = sweep_system(lines, [SystemSimConfig()], kernel_mode="stackdist")
-    b = sweep_system(lines, [SystemSimConfig()], kernel_mode="reference")
-    np.testing.assert_array_equal(a.mem_tlb_hit, b.mem_tlb_hit)
+    with pytest.raises(ValueError, match="stack-inclusion"):
+        sweep_system(lines, [SystemSimConfig()], kernel_mode="stackdist")
 
 
 # ---------------------------------------------------------------------------

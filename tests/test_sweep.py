@@ -139,6 +139,33 @@ def test_sweep_system_bitexact_vs_oracle(seed):
         assert one.mem_tlb_hit_ratio_given_cache_miss() == ev.mem_tlb_hit_ratio_given_cache_miss()
 
 
+def test_sweep_system_heterogeneous_batch_matches_kernel_interpret_path():
+    """Pallas interpret path == per-config oracle on a heterogeneous batch
+    (mixed cache/accel presence, probe policies, partitions, page sizes),
+    with a non-block-multiple trace length so the tail-padding accesses
+    (parked in each structure's extra set row) are exercised too."""
+    lines = np.random.default_rng(17).integers(0, 1 << 28, 1111).astype(np.int64)
+    cfgs = [
+        SystemSimConfig(),                               # cache, no accel TLB
+        SystemSimConfig(cache=None, num_partitions=8),   # cacheless accelerator
+        SystemSimConfig(accel_tlb=TLBConfig(entries=8, ways=4),
+                        num_partitions=4, accel_probe_on_miss_only=False),
+        SystemSimConfig(accel_tlb=TLBConfig(entries=2, ways=4),  # entries < ways
+                        page_shift=21, num_partitions=32),
+        SystemSimConfig(mem_tlb=TLBConfig(entries=64, ways=8), num_partitions=1),
+        SystemSimConfig(cache=TLBConfig(entries=512, ways=8), num_partitions=16),
+        SystemSimConfig(cache=None, accel_tlb=TLBConfig(entries=16, ways=2),
+                        num_partitions=2, accel_probe_on_miss_only=False),
+        SystemSimConfig(page_shift=21, num_partitions=128),
+    ]
+    bev = sweep_system(lines, cfgs, kernel_mode="pallas_interpret", block=256)
+    for i, c in enumerate(cfgs):
+        ev = simulate_system(lines, c)
+        np.testing.assert_array_equal(bev.cache_hit[i], ev.cache_hit)
+        np.testing.assert_array_equal(bev.accel_tlb_hit[i], ev.accel_tlb_hit)
+        np.testing.assert_array_equal(bev.mem_tlb_hit[i], ev.mem_tlb_hit)
+
+
 def test_sweep_rejects_empty_batches():
     with pytest.raises(ValueError):
         sweep_tlb(np.zeros(4, np.int64), [])

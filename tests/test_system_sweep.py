@@ -1,0 +1,174 @@
+"""Oracle-equivalence + poisoning properties for the batched joint-system
+Pallas kernel (repro.kernels.system_sim) and its sweep_system wiring.
+
+The per-config simulator ``simulate_system`` is the reference path; the
+batched scan (``system_sim_batched_ref``) and the batched Pallas kernel
+(``system_sim_batched_pallas``, run under the interpreter on CPU) must match
+it **bit-exactly** across heterogeneous batches: mixed cache/accel presence,
+probe policies, partition counts, page sizes, way-envelope padding, VMEM
+chunking, and non-block-multiple trace tails.
+"""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.core import sweep
+from repro.core.sparta import TLBConfig
+from repro.core.sweep import _system_vmem_chunks, sweep_system
+from repro.core.tlbsim import SystemSimConfig, simulate_system
+from repro.kernels.system_sim import resolve_system_mode
+
+HIT_KEYS = ("cache_hit", "accel_tlb_hit", "mem_tlb_hit")
+
+
+def _random_lines(seed: int, n: int = 1111) -> np.ndarray:
+    # Deliberately not a multiple of any block size: every kernel run
+    # exercises the trace-tail padding parked in the extra set row.
+    return np.random.default_rng(seed).integers(0, 1 << 28, n).astype(np.int64)
+
+
+def _assert_rows_match(bev, cfgs, lines):
+    for i, c in enumerate(cfgs):
+        ev = simulate_system(lines, c)
+        for k in HIT_KEYS:
+            np.testing.assert_array_equal(
+                getattr(bev, k)[i], getattr(ev, k), err_msg=f"cfg {i} {k}")
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence.
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=3)
+@given(st.integers(0, 10_000))
+def test_system_kernel_bitexact_vs_oracle_heterogeneous(seed):
+    """All three backends on a heterogeneous batch: every structure-presence
+    combination, both probe policies, mixed partitions and page sizes."""
+    lines = _random_lines(seed)
+    cfgs = [
+        SystemSimConfig(),                               # cache, no accel TLB
+        SystemSimConfig(cache=None, num_partitions=8),   # cacheless
+        SystemSimConfig(accel_tlb=TLBConfig(entries=8, ways=4),
+                        num_partitions=4, accel_probe_on_miss_only=False),
+        SystemSimConfig(accel_tlb=TLBConfig(entries=2, ways=4),   # entries < ways
+                        page_shift=21, num_partitions=32),
+        SystemSimConfig(mem_tlb=TLBConfig(entries=64, ways=8)),
+        SystemSimConfig(cache=TLBConfig(entries=512, ways=8), num_partitions=16),
+        SystemSimConfig(cache=None, accel_tlb=TLBConfig(entries=16, ways=2),
+                        num_partitions=2, accel_probe_on_miss_only=False),
+        SystemSimConfig(page_shift=21, num_partitions=128),
+    ]
+    ref = sweep_system(lines, cfgs, kernel_mode="reference")
+    pal = sweep_system(lines, cfgs, kernel_mode="pallas_interpret", block=256)
+    _assert_rows_match(ref, cfgs, lines)
+    _assert_rows_match(pal, cfgs, lines)
+
+
+def test_system_kernel_flags_are_data_not_structure():
+    """One pallas_call serves present AND absent structures: flipping a
+    config's flags must not perturb its batch neighbours (the flag-gating
+    analogue of way poisoning)."""
+    lines = _random_lines(3, n=900)
+    base = SystemSimConfig(accel_tlb=TLBConfig(entries=16, ways=4),
+                           num_partitions=4)
+    neighbours = [
+        SystemSimConfig(cache=None, num_partitions=4),
+        SystemSimConfig(accel_tlb=None, num_partitions=4),
+        SystemSimConfig(accel_tlb=TLBConfig(entries=16, ways=4),
+                        num_partitions=4, accel_probe_on_miss_only=False),
+    ]
+    solo = sweep_system(lines, [base], kernel_mode="pallas_interpret", block=256)
+    batched = sweep_system(lines, [base] + neighbours,
+                           kernel_mode="pallas_interpret", block=256)
+    for k in HIT_KEYS:
+        np.testing.assert_array_equal(getattr(batched, k)[0], getattr(solo, k)[0])
+    _assert_rows_match(batched, [base] + neighbours, lines)
+
+
+# ---------------------------------------------------------------------------
+# Padding / poisoning properties.
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=3)
+@given(st.integers(0, 10_000))
+def test_system_kernel_envelope_poisoning_invariance(seed):
+    """A small config's rows are identical whether it runs alone (tight
+    envelope) or stacked with a much larger config (every structure padded in
+    sets AND ways): poisoned padding must be invisible."""
+    lines = _random_lines(seed, n=800)
+    small = SystemSimConfig(cache=TLBConfig(entries=8, ways=2),
+                            accel_tlb=TLBConfig(entries=4, ways=2),
+                            mem_tlb=TLBConfig(entries=8, ways=2),
+                            num_partitions=2)
+    big = SystemSimConfig(cache=TLBConfig(entries=1024, ways=8),
+                          accel_tlb=TLBConfig(entries=256, ways=8),
+                          mem_tlb=TLBConfig(entries=256, ways=8),
+                          num_partitions=32)
+    for mode in ("reference", "pallas_interpret"):
+        solo = sweep_system(lines, [small], kernel_mode=mode, block=256)
+        pair = sweep_system(lines, [small, big], kernel_mode=mode, block=256)
+        for k in HIT_KEYS:
+            np.testing.assert_array_equal(
+                getattr(pair, k)[0], getattr(solo, k)[0], err_msg=f"{mode} {k}")
+
+
+def test_system_kernel_block_multiple_trace_skips_padding():
+    """Exact block-multiple traces take the no-padding path (no extra set
+    row) and still match the oracle."""
+    lines = _random_lines(5, n=1024)
+    cfgs = [SystemSimConfig(num_partitions=p) for p in (1, 8)]
+    pal = sweep_system(lines, cfgs, kernel_mode="pallas_interpret", block=256)
+    _assert_rows_match(pal, cfgs, lines)
+
+
+# ---------------------------------------------------------------------------
+# VMEM chunking.
+# ---------------------------------------------------------------------------
+
+def test_system_sweep_chunking_under_tight_vmem_budget(monkeypatch):
+    """When the three-structure envelope exceeds the scratch budget the
+    kernel path splits the batch into like-sized chunks — results unchanged
+    and every config lands in exactly one chunk."""
+    monkeypatch.setattr(sweep, "_VMEM_STATE_BUDGET_BYTES", 64 * 1024)
+    lines = _random_lines(11, n=700)
+    cfgs = [
+        SystemSimConfig(cache=TLBConfig(entries=1024, ways=8), num_partitions=64),
+        SystemSimConfig(),
+        SystemSimConfig(cache=None, num_partitions=4),
+        SystemSimConfig(accel_tlb=TLBConfig(entries=4, ways=4), num_partitions=2),
+    ]
+    c_geo = [sweep._geom(c.cache) for c in cfgs]
+    a_geo = [sweep._geom(c.accel_tlb) for c in cfgs]
+    m_geo = [(sweep._geom(c.mem_tlb)[0] * c.num_partitions,
+              sweep._geom(c.mem_tlb)[1]) for c in cfgs]
+    dims = [c_geo[i] + a_geo[i] + m_geo[i] for i in range(len(cfgs))]
+    chunks = _system_vmem_chunks(dims, block=256)
+    assert len(chunks) > 1  # budget actually forces a split
+    assert sorted(i for c in chunks for i in c) == list(range(len(cfgs)))
+    pal = sweep_system(lines, cfgs, kernel_mode="pallas_interpret", block=256)
+    _assert_rows_match(pal, cfgs, lines)
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution policy.
+# ---------------------------------------------------------------------------
+
+def test_system_sweep_rejects_stackdist_loudly():
+    """PR 4 policy: a sweep-only backend raises (stack inclusion does not
+    hold for cache-hit-conditional probes) instead of being silently run as
+    the scan."""
+    with pytest.raises(ValueError, match="stack-inclusion"):
+        sweep_system(_random_lines(0, n=64), [SystemSimConfig()],
+                     kernel_mode="stackdist")
+    with pytest.raises(ValueError, match="stack-inclusion"):
+        resolve_system_mode("stackdist")
+
+
+def test_system_mode_resolution():
+    import jax
+
+    with pytest.raises(ValueError):
+        resolve_system_mode("not-a-mode")
+    expect = "pallas" if jax.default_backend() == "tpu" else "reference"
+    assert resolve_system_mode("auto") == expect
+    assert resolve_system_mode("pallas_interpret") == "pallas_interpret"
