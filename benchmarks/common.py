@@ -52,9 +52,14 @@ class Claim:
 
 
 def save_fig(name: str, payload: dict):
+    from repro.core import benchtime
+
     FIGS.mkdir(parents=True, exist_ok=True)
     payload = dict(payload)
     payload["_written_at"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    # Same schema stamp as BENCH_sweep.json rows: figure outputs say what
+    # device they were produced on (interpret-mode CPU vs real TPU).
+    payload["_device"] = benchtime.device_metadata()
     (FIGS / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
 
 

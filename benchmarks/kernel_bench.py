@@ -9,6 +9,14 @@ stack-distance backend on a fig4-style sweep; the timeline section times the
 Pallas queueing kernel against its ``lax.scan`` reference on a fig11-style
 contended run.  Both append their result to ``BENCH_sweep.json`` at the repo
 root, so the perf trajectory is tracked PR-over-PR.
+
+All timing goes through ``repro.core.benchtime.measure`` (blocked warm-up,
+block-until-ready inside every rep's window, min-of-N with spread recorded)
+and every appended row carries the ``benchtime.device_metadata()`` schema
+stamp.  ``--check`` is the CI gate: bit-identity + required-bench coverage
+here, then the ReFrame-style tolerance-band regression gate in
+``benchmarks/perfcheck.py`` against ``benchmarks/references.json``
+(``--update-refs`` re-baselines deliberately).
 """
 from __future__ import annotations
 
@@ -21,17 +29,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_csv, save_fig
+from repro.core import benchtime
+from repro.core.benchtime import measure
 
 BENCH_SWEEP_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep.json"
 
+# Engine benches run seconds-scale calls; two blocked reps (min kept) after
+# one blocked warm-up bound the cost while still rejecting one-sided noise.
+ENGINE_REPS = 2
+
 
 def _timeit(fn, *args, reps=5):
-    fn(*args)  # compile
-    t0 = time.time()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / reps * 1e6  # us
+    return measure(fn, *args, reps=reps).best_us
 
 
 def run(quick: bool = False):
@@ -157,16 +166,29 @@ def run(quick: bool = False):
 
 
 def _append_bench_entry(entry: dict) -> None:
-    """Append one record to the BENCH_sweep.json history at the repo root."""
+    """Append one record to the BENCH_sweep.json history at the repo root.
+
+    Every entry is stamped with the ``benchtime.device_metadata()`` schema
+    (device_kind / platform / device_count / jax_version / schema_version).
+    A corrupt history file raises instead of being silently overwritten —
+    the file is the repo's entire perf trajectory.
+    """
     hist = {"history": []}
     if BENCH_SWEEP_PATH.exists():
         try:
             prior = json.loads(BENCH_SWEEP_PATH.read_text())
-            if isinstance(prior, dict):
-                hist = prior
-        except json.JSONDecodeError:
-            pass
-    hist.setdefault("history", []).append(entry)
+        except json.JSONDecodeError as e:
+            raise RuntimeError(
+                f"{BENCH_SWEEP_PATH} exists but is not valid JSON ({e}); "
+                f"refusing to overwrite the recorded perf history — restore "
+                f"it from git (or delete it deliberately) and re-run"
+            ) from e
+        if not isinstance(prior, dict):
+            raise RuntimeError(
+                f"{BENCH_SWEEP_PATH} is valid JSON but not the expected "
+                f"{{'history': [...]}} document; refusing to overwrite it")
+        hist = prior
+    hist.setdefault("history", []).append({**benchtime.device_metadata(), **entry})
     BENCH_SWEEP_PATH.write_text(json.dumps(hist, indent=1))
 
 
@@ -190,18 +212,19 @@ def _sweep_bench(quick: bool):
     ]
 
     def timed(mode):
-        best, res = None, None
-        for _ in range(2):
-            t0 = time.time()
-            res = sweep_tlb(tr.lines, specs, kernel_mode=mode)
-            best = time.time() - t0
-        return best, res
+        m = measure(sweep_tlb, tr.lines, specs, kernel_mode=mode,
+                    reps=ENGINE_REPS)
+        return m, m.result
 
-    t_ref, ref = timed("reference")
-    t_sd, sd = timed("stackdist")
+    m_ref, ref = timed("reference")
+    m_sd, sd = timed("stackdist")
+    t_ref, t_sd = m_ref.best_s, m_sd.best_s
     bit_identical = bool(np.array_equal(ref.hits, sd.hits))
+    spread = {"t_reference_s": round(m_ref.spread_frac, 3),
+              "t_stackdist_s": round(m_sd.spread_frac, 3)}
     entry = {
         "written_at": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "bench": "sweep",
         "backend": jax.default_backend(),
         "quick": quick,
         "n_accesses": int(tr.num_accesses),
@@ -210,10 +233,13 @@ def _sweep_bench(quick: bool):
         "t_stackdist_s": round(t_sd, 3),
         "speedup": round(t_ref / t_sd, 2),
         "bit_identical": bit_identical,
+        "reps": ENGINE_REPS,
+        "spread_frac": spread,
     }
     if jax.default_backend() == "tpu":
-        t_pal, pal = timed("pallas")
-        entry["t_pallas_s"] = round(t_pal, 3)
+        m_pal, pal = timed("pallas")
+        entry["t_pallas_s"] = round(m_pal.best_s, 3)
+        spread["t_pallas_s"] = round(m_pal.spread_frac, 3)
         entry["pallas_bit_identical"] = bool(np.array_equal(ref.hits, pal.hits))
 
     print_csv(
@@ -259,16 +285,13 @@ def _timeline_bench(quick: bool):
     pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
 
     def timed(mode):
-        best, res = None, None
-        for _ in range(2):
-            t0 = time.time()
-            res = timeline.simulate_timeline(inter, ev, "sparta", lat,
-                                             kernel_mode=mode, **kw)
-            best = time.time() - t0
-        return best, res
+        m = measure(timeline.simulate_timeline, inter, ev, "sparta", lat,
+                    kernel_mode=mode, reps=ENGINE_REPS, **kw)
+        return m, m.result
 
-    t_ref, ref = timed("reference")
-    t_pal, pal = timed(pallas_mode)
+    m_ref, ref = timed("reference")
+    m_pal, pal = timed(pallas_mode)
+    t_ref, t_pal = m_ref.best_s, m_pal.best_s
     bit_identical = bool(
         np.array_equal(ref.latency, pal.latency)
         and np.array_equal(ref.overhead, pal.overhead)
@@ -284,6 +307,9 @@ def _timeline_bench(quick: bool):
         "t_pallas_s": round(t_pal, 3),
         "speedup": round(t_ref / t_pal, 2),
         "bit_identical": bit_identical,
+        "reps": ENGINE_REPS,
+        "spread_frac": {"t_reference_s": round(m_ref.spread_frac, 3),
+                        "t_pallas_s": round(m_pal.spread_frac, 3)},
     }
     print_csv(
         "Timeline engine (fig11-style, 4 accels, SPARTA-32)",
@@ -341,13 +367,8 @@ def _timeline_batched_bench(quick: bool):
                 num_accelerators=A, accel_ids=ids))
 
     def timed(fn):
-        best, res = None, None
-        for _ in range(2):
-            t0 = time.time()
-            res = fn()
-            t = time.time() - t0
-            best = t if best is None else min(best, t)
-        return best, res
+        m = measure(fn, reps=ENGINE_REPS)
+        return m, m.result
 
     def looped():
         return [timeline.simulate_timeline(
@@ -357,11 +378,12 @@ def _timeline_batched_bench(quick: bool):
             kernel_mode="reference") for sp in specs]
 
     pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
-    t_loop, ref = timed(looped)
-    t_bat, bat = timed(
+    m_loop, ref = timed(looped)
+    m_bat, bat = timed(
         lambda: timeline.sweep_timeline(specs, lat, kernel_mode="reference"))
-    t_pal, pal = timed(
+    m_pal, pal = timed(
         lambda: timeline.sweep_timeline(specs, lat, kernel_mode=pallas_mode))
+    t_loop, t_bat, t_pal = m_loop.best_s, m_bat.best_s, m_pal.best_s
 
     def identical(xs):
         return bool(all(
@@ -383,6 +405,10 @@ def _timeline_batched_bench(quick: bool):
         "t_pallas_s": round(t_pal, 3),
         "speedup": round(t_loop / t_bat, 2),
         "bit_identical": bit_identical and pallas_identical,
+        "reps": ENGINE_REPS,
+        "spread_frac": {"t_looped_s": round(m_loop.spread_frac, 3),
+                        "t_batched_s": round(m_bat.spread_frac, 3),
+                        "t_pallas_s": round(m_pal.spread_frac, 3)},
     }
     print_csv(
         f"Batched timeline engine ({len(specs)} sims x {n_acc} accesses)",
@@ -444,18 +470,14 @@ def _system_batched_bench(quick: bool):
     ]
 
     def timed(fn):
-        best, res = None, None
-        for _ in range(2):
-            t0 = time.time()
-            res = fn()
-            t = time.time() - t0
-            best = t if best is None else min(best, t)
-        return best, res
+        m = measure(fn, reps=ENGINE_REPS)
+        return m, m.result
 
     pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
-    t_loop, ref = timed(lambda: [simulate_system(tr.lines, c) for c in cfgs])
-    t_bat, bat = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode="reference"))
-    t_pal, pal = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode=pallas_mode))
+    m_loop, ref = timed(lambda: [simulate_system(tr.lines, c) for c in cfgs])
+    m_bat, bat = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode="reference"))
+    m_pal, pal = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode=pallas_mode))
+    t_loop, t_bat, t_pal = m_loop.best_s, m_bat.best_s, m_pal.best_s
 
     def identical(bev):
         return bool(all(
@@ -478,6 +500,10 @@ def _system_batched_bench(quick: bool):
         "t_pallas_s": round(t_pal, 3),
         "speedup": round(t_loop / t_bat, 2),
         "bit_identical": bit_identical and pallas_identical,
+        "reps": ENGINE_REPS,
+        "spread_frac": {"t_looped_s": round(m_loop.spread_frac, 3),
+                        "t_batched_s": round(m_bat.spread_frac, 3),
+                        "t_pallas_s": round(m_pal.spread_frac, 3)},
     }
     print_csv(
         f"Batched system sweep ({len(cfgs)} configs x {tr.num_accesses} accesses)",
@@ -500,13 +526,21 @@ def _system_batched_bench(quick: bool):
 REQUIRED_BENCHES = ("sweep", "timeline", "timeline_batched", "system_batched")
 
 
-def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH) -> None:
-    """Fail (the CI smoke step) if any recorded BENCH_sweep.json row reports
-    a bit-identity violation — a perf number from a diverging backend is not
-    a result."""
+def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH,
+                        refs_path: pathlib.Path = None) -> None:
+    """The CI perf gate over the recorded BENCH_sweep.json history.
+
+    Fails on (1) a corrupt/unparseable history file, (2) any recorded row
+    reporting a bit-identity violation — a perf number from a diverging
+    backend is not a result — (3) a required bench with no recorded row,
+    and (4) any recorded wall time outside its references.json tolerance
+    band (the ReFrame-style regression gate, ``benchmarks/perfcheck.py``).
+    """
+    from benchmarks import perfcheck
+
     if not path.exists():
         return
-    hist = json.loads(path.read_text()).get("history", [])
+    hist = perfcheck.load_history(path).get("history", [])
     bad = [
         (i, e) for i, e in enumerate(hist)
         if any(k.endswith("bit_identical") and e[k] is False for k in e)
@@ -526,6 +560,8 @@ def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH) -> None:
             f"bit_identical field is on record")
     print(f"  BENCH_sweep.json: all {len(hist)} recorded rows bit-identical "
           f"({', '.join(REQUIRED_BENCHES)} covered)")
+    perfcheck.check_perf_history(
+        path, refs_path or perfcheck.REFS_PATH, history=hist)
 
 
 if __name__ == "__main__":
@@ -534,9 +570,21 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--check", action="store_true",
-                    help="only verify BENCH_sweep.json bit-identity history")
+                    help="verify BENCH_sweep.json: bit-identity, required-"
+                         "bench coverage, and the references.json "
+                         "tolerance-band perf gate")
+    ap.add_argument("--update-refs", action="store_true",
+                    help="re-baseline benchmarks/references.json from the "
+                         "latest recorded row per (bench, backend, mode, "
+                         "quick) key, then run the gate")
     args = ap.parse_args()
-    if args.check:
+    if args.update_refs:
+        from benchmarks import perfcheck
+
+        hist = perfcheck.load_history(BENCH_SWEEP_PATH).get("history", [])
+        perfcheck.update_references(hist)
+        check_bench_history()
+    elif args.check:
         check_bench_history()
     else:
         run(quick=args.quick)

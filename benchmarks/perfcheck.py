@@ -1,0 +1,229 @@
+"""ReFrame-style perf-regression gate over the BENCH_sweep.json history.
+
+``BENCH_sweep.json`` is the repo's append-only perf record: every
+``benchmarks/kernel_bench.py`` run appends one row per engine bench (min-of-N
+blocked wall times + device metadata, via ``repro.core.benchtime``).  This
+module makes those rows *load-bearing*: ``benchmarks/references.json`` holds
+one expected value per (bench, backend, mode, quick|full) key and metric,
+with a tolerance band in the spirit of ReFrame's per-system references —
+``{"ref": seconds, "tol": [lower, upper]}`` passes iff
+
+    ref * (1 + lower)  <=  recorded  <=  ref * (1 + upper).
+
+Gate semantics (``check_perf_history``, run by
+``python -m benchmarks.kernel_bench --check`` in CI):
+
+* a recorded metric outside its band **fails** — both regressions (upper
+  bound) and too-good-to-be-true speedups (lower bound, usually a broken
+  timer or a silently skipped workload);
+* a row whose (bench, backend, mode, quick) key has **no reference**, or
+  whose ``device_kind`` differs from the reference's, **warns and passes**
+  — so the first rows recorded on a real TPU can land before anyone has
+  baselined that device;
+* **legacy rows** (no ``schema_version``) were recorded with the old
+  non-blocking last-of-N timers and are skipped entirely — their numbers
+  are not trustworthy enough to gate on (see ``legacy_history`` in
+  BENCH_sweep.json);
+* a missing metric field on a schema'd row fails (schema violation);
+* a corrupt / unparseable history file fails loudly instead of being
+  silently ignored.
+
+Re-baselining is deliberate: ``python -m benchmarks.kernel_bench
+--update-refs`` (or ``python -m benchmarks.perfcheck --update-refs``)
+rewrites each reference value from the latest matching recorded row,
+preserving any hand-edited tolerance.  See EXPERIMENTS.md
+"Measurement methodology".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Optional, Tuple
+
+REFS_PATH = pathlib.Path(__file__).resolve().parent / "references.json"
+
+# Band applied when --update-refs creates a new reference entry.  Wide by
+# design: heterogeneous CI runners easily spread 2-3x on wall time, and the
+# lower bound mostly guards against obviously-broken timers.  Tighten
+# per-entry in references.json as variance data accumulates.
+DEFAULT_TOLERANCE = (-0.95, 3.0)
+
+# Absolute seconds added to the *upper* bound by --update-refs: a 40 ms
+# quick-mode reference should not fail CI over 120 ms of runner jitter,
+# while seconds-scale references are barely affected.  Explicit per metric
+# in references.json (`abs_slack_s`), so it is visible and hand-editable.
+DEFAULT_ABS_SLACK_S = 1.0
+
+REFS_SCHEMA_VERSION = 2
+
+
+def row_key(row: dict) -> str:
+    """(bench, backend, mode, quick|full) identity of a recorded row."""
+    return "|".join((
+        row.get("bench", "sweep"),
+        row.get("backend", "?"),
+        row.get("mode", "-"),
+        "quick" if row.get("quick") else "full",
+    ))
+
+
+def metric_fields(row: dict) -> List[str]:
+    """The gated wall-time fields of a row (``t_*_s``)."""
+    return sorted(k for k in row if k.startswith("t_") and k.endswith("_s"))
+
+
+def load_history(path: pathlib.Path) -> dict:
+    """Parse BENCH_sweep.json, failing loudly on corruption."""
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        raise SystemExit(
+            f"{path} is corrupt ({e}); refusing to gate on an unreadable "
+            f"perf history — restore it from git before re-running") from e
+    if not isinstance(doc, dict) or not isinstance(doc.get("history", []), list):
+        raise SystemExit(
+            f"{path} is not a {{'history': [...]}} document; restore it "
+            f"from git before re-running")
+    return doc
+
+
+def load_references(path: pathlib.Path = REFS_PATH) -> dict:
+    if not path.exists():
+        return {"schema_version": REFS_SCHEMA_VERSION, "references": {}}
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"{path} is corrupt ({e}); fix or regenerate it "
+                         f"with --update-refs") from e
+    return doc
+
+
+def check_rows(history: List[dict], refs_doc: dict,
+               ) -> Tuple[List[str], List[str], int, int]:
+    """Gate every schema'd row against its reference bands.
+
+    Returns ``(failures, warnings, n_checked, n_legacy)``; the caller decides
+    whether failures are fatal.
+    """
+    refs: Dict[str, dict] = refs_doc.get("references", {})
+    failures: List[str] = []
+    warnings: List[str] = []
+    n_checked = n_legacy = 0
+    for i, row in enumerate(history):
+        if "schema_version" not in row:
+            n_legacy += 1
+            continue
+        key = row_key(row)
+        where = f"history[{i}] ({key}, written_at={row.get('written_at')!r})"
+        entry = refs.get(key)
+        if entry is None:
+            warnings.append(
+                f"{where}: no reference for this (bench, backend, mode, "
+                f"quick) key — passing; baseline it with --update-refs")
+            continue
+        ref_kind = entry.get("device_kind")
+        row_kind = row.get("device_kind")
+        if ref_kind is not None and row_kind != ref_kind:
+            warnings.append(
+                f"{where}: recorded on device_kind={row_kind!r} but the "
+                f"reference was baselined on {ref_kind!r} — passing; "
+                f"--update-refs on that device to start gating it")
+            continue
+        n_checked += 1
+        for metric, spec in entry.get("metrics", {}).items():
+            val = row.get(metric)
+            if not isinstance(val, (int, float)):
+                failures.append(
+                    f"{where}: metric {metric!r} missing from the recorded "
+                    f"row (schema violation)")
+                continue
+            ref = float(spec["ref"])
+            lower, upper = spec.get("tol", DEFAULT_TOLERANCE)
+            lo = ref * (1.0 + lower)
+            hi = ref * (1.0 + upper) + spec.get("abs_slack_s", 0.0)
+            if not (lo <= val <= hi):
+                direction = "slower — perf regression" if val > hi else \
+                    "faster — suspiciously good, check the timer/workload"
+                failures.append(
+                    f"{where}: {metric}={val:.4g}s outside "
+                    f"[{lo:.4g}, {hi:.4g}] (ref {ref:.4g}s, tol "
+                    f"[{lower:+.0%}, {upper:+.0%}]) — {direction}")
+    return failures, warnings, n_checked, n_legacy
+
+
+def update_references(history: List[dict],
+                      refs_path: pathlib.Path = REFS_PATH) -> dict:
+    """Re-baseline: latest schema'd row per key becomes the reference.
+
+    Existing per-metric tolerances are preserved; values are overwritten.
+    """
+    doc = load_references(refs_path)
+    refs: Dict[str, dict] = doc.setdefault("references", {})
+    doc["schema_version"] = REFS_SCHEMA_VERSION
+    latest: Dict[str, dict] = {}
+    for row in history:
+        if "schema_version" in row:
+            latest[row_key(row)] = row  # later rows win
+    for key, row in latest.items():
+        old_metrics = refs.get(key, {}).get("metrics", {})
+        refs[key] = {
+            "device_kind": row.get("device_kind"),
+            "baselined_at": row.get("written_at"),
+            "metrics": {
+                m: {"ref": row[m],
+                    "tol": list(old_metrics.get(m, {}).get(
+                        "tol", DEFAULT_TOLERANCE)),
+                    "abs_slack_s": old_metrics.get(m, {}).get(
+                        "abs_slack_s", DEFAULT_ABS_SLACK_S)}
+                for m in metric_fields(row)
+            },
+        }
+    refs_path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    print(f"  references.json: baselined {len(latest)} key(s) from "
+          f"{len(history)} recorded row(s)")
+    return doc
+
+
+def check_perf_history(history_path: pathlib.Path,
+                       refs_path: pathlib.Path = REFS_PATH,
+                       history: Optional[List[dict]] = None) -> None:
+    """CI entry point: SystemExit on any out-of-band metric."""
+    if history is None:
+        if not history_path.exists():
+            return
+        history = load_history(history_path).get("history", [])
+    refs_doc = load_references(refs_path)
+    failures, warnings, n_checked, n_legacy = check_rows(history, refs_doc)
+    for w in warnings:
+        print(f"  [perfcheck warn] {w}")
+    if failures:
+        lines = "\n".join(f"  {f}" for f in failures)
+        raise SystemExit(
+            f"perf-regression gate: {len(failures)} metric(s) outside their "
+            f"reference band:\n{lines}\n"
+            f"(re-baseline deliberately with "
+            f"`python -m benchmarks.kernel_bench --update-refs`)")
+    print(f"  perfcheck: {n_checked} row(s) within reference bands "
+          f"({len(warnings)} unbaselined pass(es) with warning, "
+          f"{n_legacy} legacy row(s) skipped)")
+
+
+def main(argv=None) -> None:
+    from benchmarks.kernel_bench import BENCH_SWEEP_PATH
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", type=pathlib.Path, default=BENCH_SWEEP_PATH)
+    ap.add_argument("--refs", type=pathlib.Path, default=REFS_PATH)
+    ap.add_argument("--update-refs", action="store_true",
+                    help="re-baseline references.json from the latest "
+                         "recorded row per (bench, backend, mode, quick) key")
+    args = ap.parse_args(argv)
+    history = load_history(args.history).get("history", [])
+    if args.update_refs:
+        update_references(history, args.refs)
+    check_perf_history(args.history, args.refs, history=history)
+
+
+if __name__ == "__main__":
+    main()

@@ -54,12 +54,12 @@ def main(argv=None) -> None:
 
     claims = []
     for name in chosen:
-        t0 = time.time()
+        t0 = time.perf_counter()
         kwargs = {"quick": args.quick}
         if "kernel_mode" in inspect.signature(modules[name].run).parameters:
             kwargs["kernel_mode"] = args.kernel_mode
         claims += modules[name].run(**kwargs)
-        print(f"  ({name}: {time.time()-t0:.1f}s)")
+        print(f"  ({name}: {time.perf_counter()-t0:.1f}s)")
 
     print("\n# Claim summary")
     n_ok = sum(c.ok for c in claims)

@@ -1,0 +1,119 @@
+"""Trustworthy wall-clock measurement for JAX benchmarks.
+
+Every speedup number the repo records flows through :func:`measure`, which
+fixes the three classic JAX timing mistakes the original hand-rolled timers
+made:
+
+1. **Async dispatch**: JAX returns futures — stopping the clock without
+   ``block_until_ready`` on the *result of that rep* can end the measurement
+   before the compute finishes.  :func:`measure` blocks inside the timed
+   window of every rep (and :func:`block` also traverses plain dataclasses /
+   containers, since the sweep engines return numpy-backed result objects
+   that are not registered pytrees).
+2. **Compile leakage**: the warm-up call must itself be blocked on, or the
+   asynchronously-dispatched compile+run can overlap the first timed rep.
+3. **Last-of-N**: wall-time noise is one-sided (preemption, GC, lazy page
+   faults only ever make a run *slower*), so the honest point statistic is
+   the **min** over reps, reported here with the spread so a noisy
+   measurement is visible in the record.
+
+:func:`device_metadata` is the companion schema stamp: every recorded
+benchmark row carries the device kind / platform / device count / jax
+version it was measured on, plus ``schema_version`` so downstream perf
+gates (``benchmarks/perfcheck.py``) can tell trustworthy rows from legacy
+ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Tuple
+
+import jax
+
+# Rows written with `measure()` + `device_metadata()` carry this version.
+# Legacy BENCH_sweep.json rows (no schema_version) were recorded with
+# non-blocking last-of-N timers and are excluded from perf gating.
+SCHEMA_VERSION = 2
+
+
+def block(x: Any) -> Any:
+    """``jax.block_until_ready`` that also traverses plain dataclasses and
+    containers (the sweep/timeline engines return frozen dataclasses of
+    numpy arrays, which jax treats as opaque leaves)."""
+    if x is None:
+        return x
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        for f in dataclasses.fields(x):
+            block(getattr(x, f.name))
+        return x
+    if isinstance(x, (list, tuple)):
+        for v in x:
+            block(v)
+        return x
+    if isinstance(x, dict):
+        for v in x.values():
+            block(v)
+        return x
+    # Pytrees of jax arrays block; numpy arrays / scalars are no-ops.
+    jax.block_until_ready(x)
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """Blocked per-rep wall times (seconds, run order) + the last result."""
+
+    times_s: Tuple[float, ...]
+    result: Any = None
+
+    @property
+    def best_s(self) -> float:
+        return min(self.times_s)
+
+    @property
+    def mean_s(self) -> float:
+        return sum(self.times_s) / len(self.times_s)
+
+    @property
+    def spread_frac(self) -> float:
+        """(max - min) / min — 0 for a perfectly stable measurement."""
+        lo = self.best_s
+        return (max(self.times_s) - lo) / lo if lo > 0 else 0.0
+
+    @property
+    def best_us(self) -> float:
+        return self.best_s * 1e6
+
+
+def measure(fn: Callable, *args, reps: int = 5, warmup: int = 1,
+            **kwargs) -> Measurement:
+    """Min-of-``reps`` wall-clock timing of ``fn(*args, **kwargs)``.
+
+    Blocks until ready on every warm-up call (so compile/dispatch cannot
+    leak into the first rep's window) and on every rep's own result *inside*
+    its timed window.  Uses ``time.perf_counter`` (monotonic, high
+    resolution).
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    for _ in range(warmup):
+        block(fn(*args, **kwargs))
+    times, res = [], None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = block(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    return Measurement(times_s=tuple(times), result=res)
+
+
+def device_metadata() -> dict:
+    """Schema stamp for a recorded benchmark row: what it was measured on."""
+    dev = jax.devices()[0]
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "device_kind": dev.device_kind,
+        "platform": dev.platform,
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }

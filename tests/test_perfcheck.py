@@ -1,0 +1,282 @@
+"""Tests for the perf-measurement core (`repro.core.benchtime`) and the
+ReFrame-style perf-regression gate (`benchmarks/perfcheck.py` +
+`benchmarks.kernel_bench.check_bench_history`)."""
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import kernel_bench, perfcheck
+from repro.core import benchtime
+
+SLEEP_S = 0.05
+
+
+# ---------------------------------------------------------------- benchtime
+
+
+def _sleepy_fn(counter):
+    """A jit function whose compute takes >= SLEEP_S wall time but whose
+    dispatch may return immediately (async) — the case the old timers got
+    wrong."""
+
+    def host_sleep(x):
+        counter["calls"] += 1
+        time.sleep(SLEEP_S)
+        return np.asarray(x)
+
+    @jax.jit
+    def fn(x):
+        y = jax.pure_callback(host_sleep, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return y + 1.0
+
+    return fn
+
+
+def test_measure_blocks_every_rep():
+    counter = {"calls": 0}
+    fn = _sleepy_fn(counter)
+    x = jnp.ones(8, jnp.float32)
+    m = benchtime.measure(fn, x, reps=3, warmup=1)
+    # Warm-up + every rep actually ran the computation.
+    assert counter["calls"] == 4
+    # Every rep's timed window contains the full >= SLEEP_S compute: a
+    # timer that stops at dispatch (no block_until_ready) records ~0 here.
+    assert all(t >= SLEEP_S * 0.9 for t in m.times_s), m.times_s
+    assert m.best_s >= SLEEP_S * 0.9
+
+
+def test_measure_statistics_monotonic():
+    m = benchtime.Measurement(times_s=(0.5, 0.2, 0.4))
+    assert m.best_s == 0.2
+    assert m.best_s <= m.mean_s <= max(m.times_s)
+    assert m.spread_frac == pytest.approx((0.5 - 0.2) / 0.2)
+    assert m.best_us == pytest.approx(0.2e6)
+
+
+def test_measure_rejects_zero_reps():
+    with pytest.raises(ValueError):
+        benchtime.measure(lambda: None, reps=0)
+
+
+def test_block_traverses_containers_and_dataclasses():
+    @dataclasses.dataclass(frozen=True)
+    class Res:
+        a: object
+        b: object
+
+    x = jnp.arange(4)
+    obj = Res(a=[x, np.arange(3)], b={"k": (x, None)})
+    assert benchtime.block(obj) is obj
+    assert benchtime.block(None) is None
+
+
+def test_device_metadata_schema():
+    md = benchtime.device_metadata()
+    assert md["schema_version"] == benchtime.SCHEMA_VERSION
+    for k in ("device_kind", "platform", "device_count", "jax_version"):
+        assert md[k], md
+
+
+# ---------------------------------------------------------------- perfcheck
+
+
+def _row(**kw):
+    base = {
+        "schema_version": 2, "written_at": "2026-08-08 00:00:00",
+        "bench": "sweep", "backend": "cpu", "quick": True,
+        "device_kind": "cpu", "platform": "cpu", "device_count": 1,
+        "jax_version": jax.__version__,
+        "t_reference_s": 1.0, "t_stackdist_s": 0.2,
+        "speedup": 5.0, "bit_identical": True,
+    }
+    base.update(kw)
+    return base
+
+
+def _refs(tol=(-0.5, 0.5)):
+    return {"schema_version": 2, "references": {
+        "sweep|cpu|-|quick": {
+            "device_kind": "cpu",
+            "metrics": {
+                "t_reference_s": {"ref": 1.0, "tol": list(tol)},
+                "t_stackdist_s": {"ref": 0.2, "tol": list(tol)},
+            },
+        },
+    }}
+
+
+def test_check_rows_within_band_passes():
+    fails, warns, n_checked, n_legacy = perfcheck.check_rows(
+        [_row(t_reference_s=1.2, t_stackdist_s=0.15)], _refs())
+    assert not fails and not warns
+    assert n_checked == 1 and n_legacy == 0
+
+
+def test_check_rows_regression_fails():
+    fails, _, _, _ = perfcheck.check_rows([_row(t_reference_s=2.0)], _refs())
+    assert len(fails) == 1
+    assert "t_reference_s" in fails[0] and "regression" in fails[0]
+
+
+def test_check_rows_too_fast_fails():
+    # Below the lower band: usually a broken timer or skipped workload.
+    fails, _, _, _ = perfcheck.check_rows([_row(t_stackdist_s=0.01)], _refs())
+    assert len(fails) == 1 and "suspiciously" in fails[0]
+
+
+def test_check_rows_abs_slack_widens_upper_bound_only():
+    refs = _refs()
+    metrics = refs["references"]["sweep|cpu|-|quick"]["metrics"]
+    for spec in metrics.values():
+        spec["abs_slack_s"] = 1.0
+    # 2.0 > 1.0*1.5 relatively, but within the +1s absolute slack.
+    fails, _, _, _ = perfcheck.check_rows([_row(t_reference_s=2.0)], refs)
+    assert not fails
+    # The slack does not protect the lower (too-fast) bound.
+    fails, _, _, _ = perfcheck.check_rows([_row(t_stackdist_s=0.01)], refs)
+    assert len(fails) == 1
+
+
+def test_check_rows_unknown_device_warns_and_passes():
+    fails, warns, n_checked, _ = perfcheck.check_rows(
+        [_row(device_kind="TPU v4", t_reference_s=99.0)], _refs())
+    assert not fails and len(warns) == 1
+    assert "TPU v4" in warns[0]
+    assert n_checked == 0
+
+
+def test_check_rows_unreferenced_key_warns_and_passes():
+    fails, warns, _, _ = perfcheck.check_rows(
+        [_row(bench="timeline", mode="pallas", backend="tpu")], _refs())
+    assert not fails and len(warns) == 1
+
+
+def test_check_rows_legacy_rows_skipped():
+    legacy = _row(t_reference_s=500.0)
+    del legacy["schema_version"]
+    fails, warns, n_checked, n_legacy = perfcheck.check_rows([legacy], _refs())
+    assert not fails and not warns
+    assert n_checked == 0 and n_legacy == 1
+
+
+def test_check_rows_missing_metric_fails():
+    row = _row()
+    del row["t_stackdist_s"]
+    fails, _, _, _ = perfcheck.check_rows([row], _refs())
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_check_perf_history_raises_on_failure(tmp_path):
+    hist = tmp_path / "BENCH_sweep.json"
+    refs = tmp_path / "references.json"
+    hist.write_text(json.dumps({"history": [_row(t_reference_s=3.0)]}))
+    refs.write_text(json.dumps(_refs()))
+    with pytest.raises(SystemExit, match="perf-regression gate"):
+        perfcheck.check_perf_history(hist, refs)
+
+
+def test_load_history_corrupt_fails_loudly(tmp_path):
+    bad = tmp_path / "BENCH_sweep.json"
+    bad.write_text("{not json")
+    with pytest.raises(SystemExit, match="corrupt"):
+        perfcheck.load_history(bad)
+    bad.write_text(json.dumps([1, 2, 3]))
+    with pytest.raises(SystemExit, match="history"):
+        perfcheck.load_history(bad)
+
+
+def test_update_references_baselines_and_preserves_tol(tmp_path):
+    refs = tmp_path / "references.json"
+    refs.write_text(json.dumps(_refs(tol=(-0.2, 0.1))))
+    # Latest row per key wins; hand-edited tolerance survives re-baselining.
+    hist = [_row(t_reference_s=9.0), _row(t_reference_s=4.0, t_stackdist_s=0.8)]
+    doc = perfcheck.update_references(hist, refs)
+    entry = doc["references"]["sweep|cpu|-|quick"]
+    assert entry["metrics"]["t_reference_s"]["ref"] == 4.0
+    assert entry["metrics"]["t_reference_s"]["tol"] == [-0.2, 0.1]
+    # The freshly baselined history now passes its own gate.
+    fails, warns, n_checked, _ = perfcheck.check_rows(
+        [hist[-1]], json.loads(refs.read_text()))
+    assert not fails and not warns and n_checked == 1
+
+
+# ------------------------------------------------- kernel_bench --check gate
+
+
+def _full_history(**overrides):
+    rows = [
+        _row(),
+        _row(bench="timeline", mode="pallas_interpret", t_pallas_s=0.1),
+        _row(bench="timeline_batched", mode="pallas_interpret",
+             t_looped_s=1.0, t_batched_s=0.2, t_pallas_s=0.9),
+        _row(bench="system_batched", mode="pallas_interpret",
+             t_looped_s=1.0, t_batched_s=0.5, t_pallas_s=0.6),
+    ]
+    for r in rows:
+        r.update(overrides)
+    return {"history": rows}
+
+
+def test_check_bench_history_passes_on_clean_history(tmp_path, capsys):
+    hist = tmp_path / "BENCH_sweep.json"
+    hist.write_text(json.dumps(_full_history()))
+    kernel_bench.check_bench_history(hist, refs_path=tmp_path / "refs.json")
+    out = capsys.readouterr().out
+    assert "bit-identical" in out and "perfcheck" in out
+
+
+def test_check_bench_history_missing_bench_fails(tmp_path):
+    hist = tmp_path / "BENCH_sweep.json"
+    doc = _full_history()
+    doc["history"] = doc["history"][:2]  # drop the batched engines
+    hist.write_text(json.dumps(doc))
+    with pytest.raises(SystemExit, match="timeline_batched"):
+        kernel_bench.check_bench_history(hist, refs_path=tmp_path / "refs.json")
+
+
+def test_check_bench_history_bit_identity_fails(tmp_path):
+    hist = tmp_path / "BENCH_sweep.json"
+    hist.write_text(json.dumps(_full_history(bit_identical=False)))
+    with pytest.raises(SystemExit, match="non-bit-identical"):
+        kernel_bench.check_bench_history(hist, refs_path=tmp_path / "refs.json")
+
+
+def test_check_bench_history_corrupt_history_fails(tmp_path):
+    hist = tmp_path / "BENCH_sweep.json"
+    hist.write_text("]{ definitely not json")
+    with pytest.raises(SystemExit, match="corrupt"):
+        kernel_bench.check_bench_history(hist, refs_path=tmp_path / "refs.json")
+
+
+def test_append_bench_entry_refuses_corrupt_history(tmp_path, monkeypatch):
+    bad = tmp_path / "BENCH_sweep.json"
+    bad.write_text("{corrupt")
+    monkeypatch.setattr(kernel_bench, "BENCH_SWEEP_PATH", bad)
+    with pytest.raises(RuntimeError, match="refusing to overwrite"):
+        kernel_bench._append_bench_entry({"bench": "sweep"})
+    assert bad.read_text() == "{corrupt"  # history untouched
+
+
+def test_append_bench_entry_stamps_schema(tmp_path, monkeypatch):
+    path = tmp_path / "BENCH_sweep.json"
+    monkeypatch.setattr(kernel_bench, "BENCH_SWEEP_PATH", path)
+    kernel_bench._append_bench_entry({"bench": "sweep", "t_reference_s": 1.0})
+    row = json.loads(path.read_text())["history"][0]
+    assert row["schema_version"] == benchtime.SCHEMA_VERSION
+    for k in ("device_kind", "platform", "device_count", "jax_version"):
+        assert k in row, row
+
+
+def test_repo_references_cover_required_cpu_benches():
+    """The committed references.json must gate every required bench's quick
+    CPU rows — the configuration CI actually records."""
+    refs = perfcheck.load_references()["references"]
+    for bench in kernel_bench.REQUIRED_BENCHES:
+        matching = [k for k in refs
+                    if k.startswith(f"{bench}|cpu|") and k.endswith("|quick")]
+        assert matching, f"references.json has no quick CPU baseline for {bench}"
