@@ -51,6 +51,36 @@ class Claim:
                 f"(band {self.band[0]:.3g}..{self.band[1]:.3g}) — {self.desc}")
 
 
+def run_config(fig: str, *, resume: bool = False, chunk_accesses=None):
+    """The :class:`repro.core.orchestrator.SweepRunConfig` of one figure
+    driver: checkpoints live under ``_cache/ckpt/<fig>/`` (one blob per
+    engine call), ``resume`` re-enters them, ``chunk_accesses`` overrides
+    the commit granularity (the CI fault-injection smoke shrinks it so a
+    quick run still crosses several chunk boundaries)."""
+    from repro.core.orchestrator import SweepRunConfig
+
+    kw = {"checkpoint_dir": str(CACHE / "ckpt" / fig), "resume": bool(resume)}
+    if chunk_accesses:
+        kw["chunk_accesses"] = int(chunk_accesses)
+    return SweepRunConfig(**kw)
+
+
+def crash_safety(metas: Dict[str, dict]) -> dict:
+    """Figure-JSON stamp of how each orchestrated engine call executed:
+    backend ladder start/end, every retry/halve/downgrade event, and where a
+    resumed run re-entered.  Underscore-prefixed in payloads (like
+    ``_written_at`` / ``_device``) so resume-identity comparisons drop it."""
+    return {
+        name: {
+            "start_mode": m["start_mode"], "final_mode": m["final_mode"],
+            "resumable": m["resumable"], "resumed_from": m["resumed_from"],
+            "completed_from_checkpoint": m["completed_from_checkpoint"],
+            "events": m["events"],
+        }
+        for name, m in metas.items()
+    }
+
+
 def save_fig(name: str, payload: dict):
     from repro.core import benchtime
 

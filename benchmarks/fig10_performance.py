@@ -11,10 +11,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Claim, W4, print_csv, save_fig, trace
+from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
+                               save_fig, trace)
 from repro.core import cpi
+from repro.core.orchestrator import run_sweep_system
 from repro.core.sparta import SystemLatencies, TLBConfig
-from repro.core.sweep import sweep_system
 from repro.core.tlbsim import SystemSimConfig
 
 CACHE = TLBConfig(entries=256, ways=4)      # 16 KB virtual cache
@@ -33,9 +34,12 @@ CONFIGS = (  # (label, partitions, page_shift, design)
 )
 
 
-def run(quick: bool = False, kernel_mode: str = "auto"):
+def run(quick: bool = False, kernel_mode: str = "auto",
+        resume: bool = False, chunk_accesses=None):
     n_ops = 8_000 if quick else 25_000
     lat = SystemLatencies(n_sockets=8)
+    rc = run_config("fig10", resume=resume, chunk_accesses=chunk_accesses)
+    metas = {}
     speedups = {c[0]: [] for c in CONFIGS}
     overhead_reduction = []
     overhead_reduction_2m = []
@@ -45,7 +49,7 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
         ipa = tr.instr_per_access
         # All nine designs (4K/2M x partition counts x DIPTA/ideal) share one
         # batched pass over the trace.
-        evs = sweep_system(tr.lines, [
+        evs, metas[f"system-{w}"] = run_sweep_system(tr.lines, [
             SystemSimConfig(
                 cache=CACHE,
                 accel_tlb=ACCEL_TLB if design == "conventional" else None,
@@ -53,7 +57,7 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
                 accel_probe_on_miss_only=True,
             )
             for _, parts, shift, design in CONFIGS
-        ], kernel_mode=kernel_mode)
+        ], kernel_mode=kernel_mode, run=rc, name=f"system-{w}")
         perfs = {}
         for i_c, (label, parts, shift, design) in enumerate(CONFIGS):
             perfs[label] = cpi.evaluate_design(
@@ -100,5 +104,6 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
     save_fig("fig10", {"configs": [c[0] for c in CONFIGS], "rows": rows,
                        "mean": mean,
                        "overhead_reduction": list(map(float, overhead_reduction)),
-                       "claims": [x.row() for x in (c6a, c6b, c6c, c6d, c6e, c6f, c8)]})
+                       "claims": [x.row() for x in (c6a, c6b, c6c, c6d, c6e, c6f, c8)],
+                       "_crash_safety": crash_safety(metas)})
     return [c6a, c6b, c6c, c6d, c6e, c6f, c8]

@@ -29,10 +29,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Claim, W4, print_csv, save_fig
+from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
+                               save_fig)
 from repro.core import timeline, traces
+from repro.core.orchestrator import run_sweep_system, run_sweep_timeline
 from repro.core.sparta import SystemLatencies, TLBConfig
-from repro.core.sweep import sweep_system
 from repro.core.tlbsim import SystemSimConfig
 
 CACHE = TLBConfig(entries=256, ways=4)      # 16 KB virtual cache
@@ -42,26 +43,33 @@ PARTITIONS = 32
 QUEUES = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
 
 
-def run(quick: bool = False, kernel_mode: str = "auto"):
+def run(quick: bool = False, kernel_mode: str = "auto",
+        resume: bool = False, chunk_accesses=None):
     accels = (1, 4, 16) if quick else (1, 2, 4, 8, 16)
-    n_ops = 1_000 if quick else 4_000
-    cap = 24_000 if quick else 150_000
+    n_ops = 1_000 if quick else 8_000
+    # The crash-safe chunked engines stream the trace with a bounded
+    # per-chunk working set, so the full-mode cap is no longer pinned to the
+    # monolithic pass's 150k ceiling.
+    cap = 24_000 if quick else 400_000
     lat = SystemLatencies(n_sockets=8)
     a_max = accels[-1]
+    rc = run_config("fig11", resume=resume, chunk_accesses=chunk_accesses)
+    metas = {}
 
-    # One trace + one sweep_system per workload, shared by the whole accel
-    # loop; one sweep_timeline pass for the whole figure.
+    # One trace + one system sweep per workload, shared by the whole accel
+    # loop; one timeline sweep pass for the whole figure.  Every sweep runs
+    # through the crash-safe orchestrator: chunked, checkpointed, resumable.
     specs, cells = [], []
     for w in W4:
         streams = traces.thread_traces(w, a_max, n_ops=n_ops, seed=7)
         inter = traces.interleave(streams)[:cap]
-        evs = sweep_system(inter, [
+        evs, metas[f"system-{w}"] = run_sweep_system(inter, [
             SystemSimConfig(cache=CACHE, accel_tlb=ACCEL_TLB,
                             mem_tlb=MEM_TLB, num_partitions=1, page_shift=12),
             SystemSimConfig(cache=CACHE, accel_tlb=None,
                             mem_tlb=MEM_TLB, num_partitions=PARTITIONS,
                             page_shift=12),
-        ], kernel_mode=kernel_mode)
+        ], kernel_mode=kernel_mode, run=rc, name=f"system-{w}")
         for A in accels:
             ids = timeline.round_robin_accel_ids(inter.shape[0], A)
             specs.append(timeline.TimelineSpec(
@@ -71,7 +79,8 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
                 inter, evs[1], "sparta", cfg=QUEUES,
                 num_partitions=PARTITIONS, num_accelerators=A, accel_ids=ids))
             cells.append((w, A))
-    results = timeline.sweep_timeline(specs, lat, kernel_mode=kernel_mode)
+    results, metas["timeline"] = run_sweep_timeline(
+        specs, lat, kernel_mode=kernel_mode, run=rc, name="timeline")
 
     rows = []
     p99 = {}       # (workload, A) -> (conventional, sparta)
@@ -107,5 +116,35 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
                    "issue_interval": QUEUES.issue_interval},
         "rows": rows,
         "claims": [c9a.row(), c9b.row()],
+        "_crash_safety": crash_safety(metas),
     })
     return [c9a, c9b]
+
+
+def main(argv=None) -> int:
+    """Standalone entry point with resume support (the CI fault-injection
+    smoke SIGTERMs this mid-sweep, then reruns it with ``--resume``)."""
+    import argparse
+    import sys
+
+    from repro.core.orchestrator import Preempted
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--kernel-mode", default="auto")
+    ap.add_argument("--resume", action="store_true",
+                    help="re-enter from the last committed chunk checkpoint")
+    ap.add_argument("--chunk-accesses", type=int, default=None,
+                    help="checkpoint-commit granularity (trace accesses)")
+    args = ap.parse_args(argv)
+    try:
+        claims = run(quick=args.quick, kernel_mode=args.kernel_mode,
+                     resume=args.resume, chunk_accesses=args.chunk_accesses)
+    except Preempted as p:
+        print(f"fig11: {p}", file=sys.stderr)
+        return 75   # EX_TEMPFAIL: rerun with --resume
+    return 0 if all(c.ok for c in claims) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,10 +21,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Claim, W4, print_csv, save_fig
+from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
+                               save_fig)
 from repro.core import timeline, traces
+from repro.core.orchestrator import (run_sweep_system, run_sweep_timeline,
+                                     run_sweep_tlb)
 from repro.core.sparta import SystemLatencies, TLBConfig
-from repro.core.sweep import TLBSweepSpec, sweep_system, sweep_tlb
+from repro.core.sweep import TLBSweepSpec
 from repro.core.tlbsim import SystemSimConfig
 
 THREADS = (1, 2, 4, 8, 16)
@@ -34,10 +37,13 @@ CACHE = TLBConfig(entries=256, ways=4)  # virtual cache for the timeline half
 QUEUES = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
 
 
-def run(quick: bool = False, kernel_mode: str = "auto"):
+def run(quick: bool = False, kernel_mode: str = "auto",
+        resume: bool = False, chunk_accesses=None):
     n_ops = 4_000 if quick else 12_000
     tl_cap = 12_000 if quick else 40_000
     t_max = THREADS[-1]
+    rc = run_config("fig5", resume=resume, chunk_accesses=chunk_accesses)
+    metas = {}
     specs = [TLBSweepSpec(TLB, num_partitions=p, page_shift=12) for p in PARTS]
     results = {}
     inter_max = {}  # workload -> the t_max interleaved trace (timeline reuse)
@@ -48,7 +54,10 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
             inter = traces.interleave(streams)[:1_200_000]
             if t == t_max:
                 inter_max[w] = inter
-            grid[:, i_t] = sweep_tlb(inter, specs, kernel_mode=kernel_mode).miss_ratios
+            batched, metas[f"tlb-{w}-t{t}"] = run_sweep_tlb(
+                inter, specs, kernel_mode=kernel_mode, run=rc,
+                name=f"tlb-{w}-t{t}")
+            grid[:, i_t] = batched.miss_ratios
         for i_p, p in enumerate(PARTS):
             results[f"{w}/P{p}"] = [float(x) for x in grid[i_p]]
     rows = [[w, p] + results[f"{w}/P{p}"] for w in W4 for p in PARTS]
@@ -82,16 +91,17 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
     tl_specs = []
     for w in W4:
         sl = inter_max[w][:tl_cap]  # slice of the already-streamed trace
-        evs = sweep_system(sl, [
+        evs, metas[f"system-{w}"] = run_sweep_system(sl, [
             SystemSimConfig(cache=CACHE, accel_tlb=None, mem_tlb=TLB,
                             num_partitions=p, page_shift=12)
             for p in PARTS
-        ], kernel_mode=tl_mode)
+        ], kernel_mode=tl_mode, run=rc, name=f"system-{w}")
         for i_p, p in enumerate(PARTS):
             tl_specs.append(timeline.TimelineSpec(
                 sl, evs[i_p], "sparta", cfg=QUEUES, num_partitions=p,
                 num_accelerators=t_max))
-    tl_res = timeline.sweep_timeline(tl_specs, lat, kernel_mode=tl_mode)
+    tl_res, metas["timeline"] = run_sweep_timeline(
+        tl_specs, lat, kernel_mode=tl_mode, run=rc, name="timeline")
     tl_p99 = {}
     tl_rows = []
     for i, w in enumerate(W4):
@@ -106,5 +116,6 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
     print(c3a); print(c3b)
     save_fig("fig5", {"threads": THREADS, "parts": PARTS, "results": results,
                       "timeline_p99": tl_p99, "timeline_cap": tl_cap,
-                      "claims": [c3a.row(), c3b.row()]})
+                      "claims": [c3a.row(), c3b.row()],
+                      "_crash_safety": crash_safety(metas)})
     return [c3a, c3b]

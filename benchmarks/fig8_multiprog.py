@@ -8,10 +8,12 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Claim, GIB, print_csv, save_fig
+from benchmarks.common import (Claim, GIB, crash_safety, print_csv,
+                               run_config, save_fig)
 from repro.core import traces
+from repro.core.orchestrator import run_sweep_tlb
 from repro.core.sparta import TLBConfig
-from repro.core.sweep import TLBSweepSpec, sweep_tlb
+from repro.core.sweep import TLBSweepSpec
 
 PARTS = (1, 4, 16, 64)
 TLB = TLBConfig(entries=128, ways=4)
@@ -35,9 +37,12 @@ def _mix(n_ops, seed, spec):
     return inter, who, names
 
 
-def run(quick: bool = False, kernel_mode: str = "auto"):
+def run(quick: bool = False, kernel_mode: str = "auto",
+        resume: bool = False, chunk_accesses=None):
     n_ops = 4_000 if quick else 10_000
     fp32 = 32 * GIB
+    rc = run_config("fig8", resume=resume, chunk_accesses=chunk_accesses)
+    metas = {}
     mixes = {
         "bst_e_x1": [("bst_external", 1, fp32, 0)],
         "bst_e_x2": [("bst_external", 2, fp32, 0)],
@@ -55,10 +60,10 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
         # All partition counts ride one batched sweep over the mixed trace
         # (one stack-distance pass per partition count under the default
         # kernel_mode: each P is its own set-mapping bucket).
-        batched = sweep_tlb(
+        batched, metas[f"tlb-{name}"] = run_sweep_tlb(
             inter >> (12 - 6),
             [TLBSweepSpec(TLB, num_partitions=p) for p in PARTS],
-            kernel_mode=kernel_mode,
+            kernel_mode=kernel_mode, run=rc, name=f"tlb-{name}",
         )
         line = []
         for i_p, _ in enumerate(PARTS):
@@ -83,5 +88,6 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
     print_csv("Fig8 BST-E miss ratio vs partitions", ["mix"] + [f"P{p}" for p in PARTS], rows)
     print(c3c); print(c3d)
     save_fig("fig8", {"parts": PARTS, "results": results,
-                      "claims": [c3c.row(), c3d.row()]})
+                      "claims": [c3c.row(), c3d.row()],
+                      "_crash_safety": crash_safety(metas)})
     return [c3c, c3d]

@@ -11,10 +11,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Claim, W4, print_csv, save_fig, trace
+from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
+                               save_fig, trace)
 from repro.core import cpi
+from repro.core.orchestrator import run_sweep_system
 from repro.core.sparta import SystemLatencies, TLBConfig
-from repro.core.sweep import sweep_system
 from repro.core.tlbsim import SystemSimConfig
 
 ENTRIES = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -23,9 +24,12 @@ MEM_TLB = TLBConfig(entries=128, ways=4)
 CACHE = TLBConfig(entries=256, ways=4)  # 16KB / 64B lines
 
 
-def run(quick: bool = False, kernel_mode: str = "auto"):
+def run(quick: bool = False, kernel_mode: str = "auto",
+        resume: bool = False, chunk_accesses=None):
     n_ops = 8_000 if quick else 25_000
     lat = SystemLatencies()
+    rc = run_config("fig9", resume=resume, chunk_accesses=chunk_accesses)
+    metas = {}
     results, rows = {}, []
     for w in W4:
         tr = trace(w, n_ops=n_ops)
@@ -42,7 +46,8 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
             for e in ENTRIES]
         cfgs.append(SystemSimConfig(
             cache=CACHE, accel_tlb=None, mem_tlb=MEM_TLB, num_partitions=P))
-        evs = sweep_system(tr.lines, cfgs, kernel_mode=kernel_mode)
+        evs, metas[f"system-{w}"] = run_sweep_system(
+            tr.lines, cfgs, kernel_mode=kernel_mode, run=rc, name=f"system-{w}")
 
         base = cpi.evaluate_design("conventional", evs[0], lat, instr_per_access=ipa)
         line = []
@@ -67,5 +72,6 @@ def run(quick: bool = False, kernel_mode: str = "auto"):
               ["workload"] + [str(e) for e in ENTRIES] + ["virt$ no TLB"], rows)
     print(c7a); print(c7b)
     save_fig("fig9", {"entries": ENTRIES, "results": results,
-                      "claims": [c7a.row(), c7b.row()]})
+                      "claims": [c7a.row(), c7b.row()],
+                      "_crash_safety": crash_safety(metas)})
     return [c7a, c7b]

@@ -23,6 +23,7 @@ import inspect
 import sys
 import time
 
+from repro.core.orchestrator import Preempted
 from repro.kernels.common import SWEEP_MODES
 
 
@@ -36,6 +37,12 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, help="comma-separated figure list")
     ap.add_argument("--kernel-mode", default="auto", choices=SWEEP_MODES,
                     help="sweep-engine backend for the trace-sweep figures")
+    ap.add_argument("--resume", action="store_true",
+                    help="re-enter interrupted trace sweeps from their last "
+                         "committed chunk checkpoint (fig5/8/9/10/11)")
+    ap.add_argument("--chunk-accesses", type=int, default=None,
+                    help="checkpoint-commit granularity for the crash-safe "
+                         "chunked sweeps (trace accesses per chunk)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -56,9 +63,18 @@ def main(argv=None) -> None:
     for name in chosen:
         t0 = time.perf_counter()
         kwargs = {"quick": args.quick}
-        if "kernel_mode" in inspect.signature(modules[name].run).parameters:
+        params = inspect.signature(modules[name].run).parameters
+        if "kernel_mode" in params:
             kwargs["kernel_mode"] = args.kernel_mode
-        claims += modules[name].run(**kwargs)
+        if "resume" in params:
+            kwargs["resume"] = args.resume
+        if "chunk_accesses" in params and args.chunk_accesses:
+            kwargs["chunk_accesses"] = args.chunk_accesses
+        try:
+            claims += modules[name].run(**kwargs)
+        except Preempted as exc:
+            print(f"({name}: {exc})", file=sys.stderr)
+            sys.exit(75)   # EX_TEMPFAIL: rerun with --resume
         print(f"  ({name}: {time.perf_counter()-t0:.1f}s)")
 
     print("\n# Claim summary")

@@ -1,0 +1,112 @@
+"""CI fault-injection smoke: SIGTERM a fig11 run mid-sweep, resume it, and
+fail if the resumed figure differs from an uninterrupted run.
+
+Three phases, all ``--quick`` with a small ``--chunk-accesses`` so even the
+CI-sized trace crosses many checkpoint boundaries:
+
+1. **Reference run** — fig11 start to finish; its ``fig11.json`` is the
+   ground truth.
+2. **Interrupted run** — a fresh fig11 is SIGTERMed as soon as its first
+   chunk checkpoint is durably on disk; the process must exit with code 75
+   (EX_TEMPFAIL, the orchestrator's ``Preempted`` convention) and leave
+   checkpoint blobs behind.
+3. **Resumed run** — fig11 with ``--resume`` re-enters from the last
+   committed chunk and must finish; its ``fig11.json`` must equal the
+   reference byte-for-byte after dropping the ``_``-prefixed stamp keys
+   (``_written_at``, ``_device``, ``_crash_safety`` — the crash-safety
+   record legitimately differs: the resumed run says where it re-entered).
+
+Exit 0 on success, 1 on any mismatch, with a diff summary on stderr.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+HERE = pathlib.Path(__file__).resolve().parent
+FIG = HERE / "_cache" / "figs" / "fig11.json"
+CKPT = HERE / "_cache" / "ckpt" / "fig11"
+CHUNK = 4_096   # small enough that a --quick 24k-access trace has ~6 chunks
+CMD = [sys.executable, "-m", "benchmarks.fig11_tail_latency", "--quick",
+       "--chunk-accesses", str(CHUNK)]
+
+
+def _strip(payload: dict) -> dict:
+    return {k: v for k, v in payload.items() if not k.startswith("_")}
+
+
+def _load_fig() -> dict:
+    return json.loads(FIG.read_text())
+
+
+def _clear():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    if FIG.exists():
+        FIG.unlink()
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    print("[smoke_resume] phase 1: uninterrupted reference run")
+    _clear()
+    p = subprocess.run(CMD, env=env, cwd=HERE.parent)
+    if p.returncode not in (0, 1):   # 1 = a claim out of band, still a figure
+        print(f"[smoke_resume] reference run failed (exit {p.returncode})",
+              file=sys.stderr)
+        return 1
+    reference = _strip(_load_fig())
+
+    print("[smoke_resume] phase 2: fresh run, SIGTERM at first chunk checkpoint")
+    _clear()
+    child = subprocess.Popen(CMD, env=env, cwd=HERE.parent)
+    deadline = time.monotonic() + 600
+    while time.monotonic() < deadline:
+        if child.poll() is not None:
+            break
+        if CKPT.exists() and any(CKPT.glob("*.ckpt")):
+            child.send_signal(signal.SIGTERM)
+            break
+        time.sleep(0.05)
+    rc = child.wait(timeout=600)
+    if rc == 75:
+        print("[smoke_resume] interrupted cleanly (exit 75), checkpoints on disk")
+    elif rc in (0, 1):
+        # The run beat the signal; resume must then be a pure checkpoint read.
+        print("[smoke_resume] run finished before the signal landed; "
+              "resume still must reproduce it")
+    else:
+        print(f"[smoke_resume] interrupted run exited {rc}, expected 75",
+              file=sys.stderr)
+        return 1
+
+    print("[smoke_resume] phase 3: rerun with --resume")
+    p = subprocess.run(CMD + ["--resume"], env=env, cwd=HERE.parent)
+    if p.returncode not in (0, 1):
+        print(f"[smoke_resume] resumed run failed (exit {p.returncode})",
+              file=sys.stderr)
+        return 1
+    resumed = _strip(_load_fig())
+
+    if resumed != reference:
+        ref_s = json.dumps(reference, sort_keys=True, indent=1).splitlines()
+        res_s = json.dumps(resumed, sort_keys=True, indent=1).splitlines()
+        diff = [f"-{a}\n+{b}" for a, b in zip(ref_s, res_s) if a != b]
+        print("[smoke_resume] FAIL: resumed figure differs from reference:",
+              file=sys.stderr)
+        print("\n".join(diff[:40]), file=sys.stderr)
+        return 1
+    print("[smoke_resume] PASS: resumed fig11.json is identical to the "
+          "uninterrupted run")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

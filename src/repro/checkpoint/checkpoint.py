@@ -19,6 +19,8 @@ Guarantees:
 """
 from __future__ import annotations
 
+import hashlib
+import io
 import json
 import os
 import pathlib
@@ -27,7 +29,7 @@ import re
 import shutil
 import threading
 import uuid
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -130,6 +132,111 @@ def restore_resharded(root, template, mesh, specs, step: Optional[int] = None):
     def put(leaf, spec):
         return jax.device_put(leaf, NamedSharding(mesh, spec))
     return jax.tree.map(put, tree, specs), step
+
+
+# ---------------------------------------------------------------------------
+# Single-file checksummed blobs (sweep-orchestrator chunk checkpoints).
+#
+# Format: one ASCII header line `repro-ckpt-v1 sha256:<hex>\n` followed by an
+# npz payload whose digest the header pins.  Arrays plus a JSON meta dict ride
+# in one file so a chunk checkpoint commits (or doesn't) as a unit; the
+# directory layout above stays reserved for model trees.
+# ---------------------------------------------------------------------------
+
+BLOB_MAGIC = "repro-ckpt-v1"
+_META_KEY = "__meta__"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint blob failed validation (truncated, bit-flipped, or not a
+    checkpoint at all).  Deliberately NOT silently ignored by resume paths."""
+
+
+def write_checkpoint_blob(path, arrays: Dict[str, np.ndarray], meta: dict) -> pathlib.Path:
+    """Atomically write a checksummed single-file checkpoint.
+
+    Durability contract (mirrors the BENCH_sweep.json history policy): the
+    payload is serialised fully in memory, sha256-pinned in the header,
+    written to a ``.tmp-<nonce>`` sibling, fsync'd, then ``os.replace``d into
+    place (the commit point), and the parent directory is fsync'd so the
+    rename itself survives power loss.  Readers therefore only ever see a
+    complete blob or no blob.
+    """
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if _META_KEY in arrays:
+        raise ValueError(f"array key {_META_KEY!r} is reserved for metadata")
+    payload = {k: np.asarray(v) for k, v in arrays.items()}
+    payload[_META_KEY] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8
+    ).copy()
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    body = buf.getvalue()
+    header = f"{BLOB_MAGIC} sha256:{hashlib.sha256(body).hexdigest()}\n".encode()
+
+    tmp = path.with_name(f"{path.name}.tmp-{uuid.uuid4().hex[:8]}")
+    with open(tmp, "wb") as f:
+        f.write(header)
+        f.write(body)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # commit
+    try:
+        dfd = os.open(str(path.parent), os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:  # pragma: no cover - e.g. directories on exotic fs
+        pass
+    return path
+
+
+def read_checkpoint_blob(path) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Load and validate a blob written by :func:`write_checkpoint_blob`.
+
+    Raises :class:`CheckpointCorruptError` (with a clear, actionable message)
+    if the header is missing/foreign or the payload digest does not match —
+    a truncated or bit-flipped checkpoint is *refused*, never resumed.
+    """
+    path = pathlib.Path(path)
+    data = path.read_bytes()
+    nl = data.find(b"\n")
+    refusal = (
+        "refusing to resume from it — delete it deliberately (or start "
+        "without --resume) to begin a fresh run"
+    )
+    if nl < 0:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} has no header line (truncated?); {refusal}")
+    try:
+        magic, digest_field = data[:nl].decode("ascii").split(" ", 1)
+    except (UnicodeDecodeError, ValueError):
+        raise CheckpointCorruptError(
+            f"checkpoint {path} header is unparseable; {refusal}") from None
+    if magic != BLOB_MAGIC or not digest_field.startswith("sha256:"):
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is not a {BLOB_MAGIC} blob "
+            f"(header {data[:nl][:64]!r}); {refusal}")
+    body = data[nl + 1:]
+    actual = hashlib.sha256(body).hexdigest()
+    expected = digest_field[len("sha256:"):]
+    if actual != expected:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} failed its content checksum "
+            f"(expected sha256:{expected[:12]}…, got sha256:{actual[:12]}… — "
+            f"truncated or bit-flipped); {refusal}")
+    try:
+        with np.load(io.BytesIO(body), allow_pickle=False) as npz:
+            meta = json.loads(bytes(npz[_META_KEY]).decode())
+            arrays = {k: npz[k] for k in npz.files if k != _META_KEY}
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path} payload is undecodable ({e}); {refusal}") from e
+    return arrays, meta
 
 
 class AsyncCheckpointer:

@@ -63,6 +63,7 @@ from repro.core.tlbsim import (
     _geom,
     _prepare_keys,
     _scan_tlb_batched,
+    padded_tlb_state,
 )
 from repro.kernels.common import SWEEP_MODES, resolve_mode
 from repro.kernels.system_sim import resolve_system_mode, system_sim_batched
@@ -72,6 +73,8 @@ __all__ = [
     "TLBSweepSpec",
     "BatchedTLBResult",
     "BatchedSystemEvents",
+    "TLBSweepStream",
+    "SystemSweepStream",
     "sweep_tlb",
     "sweep_system",
 ]
@@ -259,6 +262,111 @@ def _vmem_chunks(geoms: Sequence[Tuple[int, int]], *, block: int = 512) -> list:
         stream_words=3 * block, budget_bytes=_VMEM_STATE_BUDGET_BYTES)
 
 
+class TLBSweepStream:
+    """Resumable chunked execution of :func:`sweep_tlb` (minus the
+    non-chunkable ``"stackdist"`` backend).
+
+    The stream owns the carried per-config LRU state; each
+    :meth:`run_chunk` call advances every config through one slice of the
+    address stream and returns that slice's hit bits.  Feeding the chunks of
+    a trace in order is **bit-identical** to one monolithic
+    :func:`sweep_tlb` call — in any backend, and across backend *changes* at
+    chunk boundaries (the orchestrator's degradation ladder): the batch is
+    always grouped by the Pallas VMEM envelope (:func:`_vmem_chunks`) and
+    every group's state always allocates the spare parked set row, so the
+    state layout is independent of the mode a chunk happens to run in.
+
+    :meth:`export_state` / :meth:`import_state` round-trip the carried state
+    through plain numpy arrays (the checkpoint payload of
+    :mod:`repro.core.orchestrator`).
+    """
+
+    engine = "sweep_tlb"
+
+    def __init__(self, specs: Sequence[TLBSweepSpec], *, block: int = 512):
+        if not specs:
+            raise ValueError("TLBSweepStream needs at least one spec")
+        shifted = [sp.page_shift is not None for sp in specs]
+        if any(shifted) and not all(shifted):
+            raise ValueError(
+                "TLBSweepStream batch mixes page_shift=None (VPN-stream) specs "
+                "with page_shift-set (line-stream) specs; one input stream "
+                "cannot be both")
+        self.specs = tuple(specs)
+        self.block = int(block)
+        self._geoms = [sp.geometry for sp in self.specs]
+        self.groups = _vmem_chunks(self._geoms, block=self.block)
+        self._state = []
+        for g in self.groups:
+            sets = max(self._geoms[i][0] for i in g)
+            ways = max(self._geoms[i][1] for i in g)
+            valid = tuple(self._geoms[i][1] for i in g)
+            # One spare parked set row (index `sets`) in every mode, so a
+            # chunk may be block-padded mid-stream without observable effect.
+            self._state.append(padded_tlb_state(len(g), sets + 1, ways, valid))
+        self.now = 0
+
+    def fingerprint(self) -> dict:
+        """JSON-able identity of the stream's layout: a checkpoint taken by
+        one stream may only be imported by a stream with an equal one."""
+        return {
+            "engine": self.engine,
+            "block": self.block,
+            "specs": [[g[0], g[1], sp.num_partitions,
+                       sp.page_shift if sp.page_shift is not None else -1]
+                      for g, sp in zip(self._geoms, self.specs)],
+        }
+
+    def run_chunk(self, addrs: np.ndarray, *, kernel_mode: str = "auto") -> np.ndarray:
+        """Advance every config through ``addrs`` (the next trace slice);
+        returns hit bits bool [B, len(addrs)].  State commits only after the
+        whole chunk computed, so a failed call leaves the stream unchanged
+        and the chunk can be retried (possibly in a different mode)."""
+        mode = resolve_mode(kernel_mode)
+        set_b, tag_b = _sweep_keys(np.asarray(addrs), self.specs)
+        n = set_b.shape[1]
+        from repro.kernels.tlb_sim import tlb_sim_batched_carry
+
+        hits = np.empty((len(self.specs), n), dtype=bool)
+        new_state = []
+        for gi, g in enumerate(self.groups):
+            h, tags, last = tlb_sim_batched_carry(
+                jnp.asarray(set_b[g]), jnp.asarray(tag_b[g]),
+                *self._state[gi], self.now,
+                block=self.block, kernel_mode=mode)
+            hits[g] = np.asarray(h)   # forces the computation (commit gate)
+            new_state.append((tags, last))
+        self._state = new_state
+        self.now += n
+        return hits
+
+    def export_state(self) -> dict:
+        out = {"now": np.array([self.now], np.int64)}
+        for gi, (tags, last) in enumerate(self._state):
+            out[f"g{gi}_tags"] = np.asarray(tags)
+            out[f"g{gi}_last"] = np.asarray(last)
+        return out
+
+    def import_state(self, arrays: dict) -> None:
+        state = []
+        for gi in range(len(self.groups)):
+            pair = []
+            for part in ("tags", "last"):
+                key = f"g{gi}_{part}"
+                if key not in arrays:
+                    raise ValueError(f"{self.engine} state missing array {key!r}")
+                arr = np.asarray(arrays[key])
+                want = tuple(np.asarray(self._state[gi][0]).shape)
+                if tuple(arr.shape) != want:
+                    raise ValueError(
+                        f"{self.engine} state array {key!r} has shape "
+                        f"{tuple(arr.shape)}, expected {want}")
+                pair.append(jnp.asarray(arr.astype(np.int32)))
+            state.append(tuple(pair))
+        self._state = state
+        self.now = int(np.asarray(arrays["now"]).reshape(-1)[0])
+
+
 # ---------------------------------------------------------------------------
 # Stack-distance backend: bucket specs by set-mapping, one depth pass each.
 # ---------------------------------------------------------------------------
@@ -439,3 +547,108 @@ def sweep_system(
         for h, y in zip(hits, ys):
             h[chunk] = np.asarray(y)[:, :n]
     return BatchedSystemEvents(*hits, n_warm=n - n0)
+
+
+class SystemSweepStream:
+    """Resumable chunked execution of :func:`sweep_system`.
+
+    Same contract as :class:`TLBSweepStream`, with three carried LRU
+    structures per config (cache, accel TLB, partitioned mem TLB): feeding a
+    line trace chunk by chunk is bit-identical to one monolithic
+    :func:`sweep_system` call in any backend and across backend changes at
+    chunk boundaries.  The batch grouping (:func:`_system_vmem_chunks`) and
+    the spare parked set row per structure are mode-independent.
+    """
+
+    engine = "sweep_system"
+    _STRUCTS = ("c", "a", "m")
+
+    def __init__(self, cfgs: Sequence[SystemSimConfig], *, block: int = 512):
+        if not cfgs:
+            raise ValueError("SystemSweepStream needs at least one config")
+        self.cfgs = tuple(cfgs)
+        self.block = int(block)
+        c_geo = [_geom(c.cache) for c in self.cfgs]
+        a_geo = [_geom(c.accel_tlb) for c in self.cfgs]
+        m_geo = [(_geom(c.mem_tlb)[0] * c.num_partitions, _geom(c.mem_tlb)[1])
+                 for c in self.cfgs]
+        self._geos = (c_geo, a_geo, m_geo)
+        dims = [c_geo[i] + a_geo[i] + m_geo[i] for i in range(len(self.cfgs))]
+        self.groups = _system_vmem_chunks(dims, block=self.block)
+        self._flags = np.asarray(
+            [[c.cache is not None, c.accel_tlb is not None,
+              c.accel_probe_on_miss_only] for c in self.cfgs], np.int32)
+        self._state = []
+        for g in self.groups:
+            st = []
+            for geos in self._geos:
+                sets = max(geos[i][0] for i in g)
+                ways = max(geos[i][1] for i in g)
+                valid = tuple(geos[i][1] for i in g)
+                st += list(padded_tlb_state(len(g), sets + 1, ways, valid))
+            self._state.append(tuple(st))
+        self.now = 0
+
+    def fingerprint(self) -> dict:
+        return {
+            "engine": self.engine,
+            "block": self.block,
+            "cfgs": [[*self._geos[0][i], *self._geos[1][i], *self._geos[2][i],
+                      int(self._flags[i][0]), int(self._flags[i][1]),
+                      int(self._flags[i][2]), c.num_partitions, c.page_shift]
+                     for i, c in enumerate(self.cfgs)],
+        }
+
+    def run_chunk(self, lines: np.ndarray, *, kernel_mode: str = "auto"):
+        """Advance every config through ``lines`` (the next trace slice);
+        returns (cache, accel_tlb, mem_tlb) hit bits, each bool
+        [B, len(lines)].  Commit-on-success like :class:`TLBSweepStream`."""
+        mode = resolve_system_mode(kernel_mode)
+        lines = np.asarray(lines)
+        streams = [np.stack(rows) for rows in
+                   zip(*(_system_keys(lines, c) for c in self.cfgs))]
+        n = lines.shape[0]
+        from repro.kernels.system_sim import system_sim_batched_carry
+
+        hits = [np.empty((len(self.cfgs), n), dtype=bool) for _ in range(3)]
+        new_state = []
+        for gi, g in enumerate(self.groups):
+            ys, st = system_sim_batched_carry(
+                *(jnp.asarray(s[g]) for s in streams),
+                jnp.asarray(self._flags[g]), self._state[gi], self.now,
+                block=self.block, kernel_mode=mode)
+            for h, y in zip(hits, ys):
+                h[g] = np.asarray(y)   # forces the computation (commit gate)
+            new_state.append(st)
+        self._state = new_state
+        self.now += n
+        return tuple(hits)
+
+    def export_state(self) -> dict:
+        out = {"now": np.array([self.now], np.int64)}
+        for gi, st in enumerate(self._state):
+            for k, s in enumerate(self._STRUCTS):
+                out[f"g{gi}_{s}_tags"] = np.asarray(st[2 * k])
+                out[f"g{gi}_{s}_last"] = np.asarray(st[2 * k + 1])
+        return out
+
+    def import_state(self, arrays: dict) -> None:
+        state = []
+        for gi in range(len(self.groups)):
+            st = []
+            for k, s in enumerate(self._STRUCTS):
+                for j, part in enumerate(("tags", "last")):
+                    key = f"g{gi}_{s}_{part}"
+                    if key not in arrays:
+                        raise ValueError(
+                            f"{self.engine} state missing array {key!r}")
+                    arr = np.asarray(arrays[key])
+                    want = tuple(np.asarray(self._state[gi][2 * k + j]).shape)
+                    if tuple(arr.shape) != want:
+                        raise ValueError(
+                            f"{self.engine} state array {key!r} has shape "
+                            f"{tuple(arr.shape)}, expected {want}")
+                    st.append(jnp.asarray(arr.astype(np.int32)))
+            state.append(tuple(st))
+        self._state = state
+        self.now = int(np.asarray(arrays["now"]).reshape(-1)[0])

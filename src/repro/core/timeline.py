@@ -42,13 +42,15 @@ from repro.kernels.timeline import (
     TimelineParams,
     pack_params,
     resolve_timeline_mode,
+    timeline_init_state_batched,
     timeline_sim,
     timeline_sim_batched,
+    timeline_sim_batched_carry,
 )
 
 __all__ = ["TimelineConfig", "TimelineResult", "TimelineSpec",
-           "simulate_timeline", "sweep_timeline", "round_robin_accel_ids",
-           "DESIGNS"]
+           "TimelineSweepStream", "simulate_timeline", "sweep_timeline",
+           "round_robin_accel_ids", "DESIGNS"]
 
 DESIGNS = ("conventional", "sparta", "dipta", "ideal")
 
@@ -353,12 +355,11 @@ def sweep_timeline(
 
     # Trace-length padding: trailing zero-latency cache hits from accel 0
     # (exactly the Pallas block-padding discipline; outputs are dropped).
-    pad_vals = (0, 0, 0, 0, 1, 1, 1, np.float32(0.0))
     cols = []
     for (inputs, _), n in zip(prepared, lens):
         row = [np.concatenate([x, np.full(n_max - n, v, dtype=x.dtype)])
                if n < n_max else x
-               for x, v in zip(inputs, pad_vals)]
+               for x, v in zip(inputs, _PAD_VALS)]
         cols.append(row)
     stacked = [np.stack([row[k] for row in cols]) for k in range(8)]
 
@@ -387,3 +388,164 @@ def sweep_timeline(
         )
         for i, (sp, n) in enumerate(zip(specs, lens))
     ]
+
+
+# Trailing trace padding shared by sweep_timeline and TimelineSweepStream:
+# zero-latency cache hits from accelerator 0 (read state, complete locally,
+# outputs dropped).
+_PAD_VALS = (0, 0, 0, 0, 1, 1, 1, np.float32(0.0))
+
+
+class TimelineSweepStream:
+    """Resumable chunked execution of :func:`sweep_timeline`.
+
+    The stream prepares the stacked per-access columns of every spec once
+    (identically to :func:`sweep_timeline`, including the trailing per-spec
+    length padding) and owns the carried queueing state; each
+    :meth:`run_chunk` call advances every sim through one slice
+    ``[lo, hi)`` of the stacked trace axis.  Feeding the slices in order is
+    **bit-identical** to one monolithic :func:`sweep_timeline` call in any
+    backend and across backend changes at chunk boundaries: the sim grouping
+    (:func:`_timeline_vmem_chunks`) is mode-independent and all backends
+    share one state layout and step function.
+
+    Unlike the LRU streams, a timeline chunk can NOT be padded mid-stream
+    (padding perturbs accelerator 0's issue clock), so every chunk except
+    the final one must be a multiple of ``block`` (or at most ``block``
+    long); the final chunk is tail-padded exactly like the monolithic op.
+    """
+
+    engine = "sweep_timeline"
+
+    def __init__(self, specs: Sequence[TimelineSpec],
+                 lat: Optional[SystemLatencies] = None, *, block: int = 512):
+        if not specs:
+            raise ValueError("TimelineSweepStream needs at least one spec")
+        self.specs = tuple(specs)
+        self.block = int(block)
+        prepared = []
+        for sp in self.specs:
+            sp_lat = sp.lat if sp.lat is not None else lat
+            if sp_lat is None:
+                raise ValueError(
+                    "TimelineSweepStream: spec has lat=None and no "
+                    "stream-level lat given")
+            prepared.append(_timeline_inputs(
+                sp.lines, sp.events, sp.design, sp_lat, sp.cfg,
+                sp.num_partitions, sp.page_shift, sp.num_accelerators,
+                sp.accel_ids, sp.workload, sp.way_accuracy))
+        self.lens = [int(p[0][0].shape[0]) for p in prepared]
+        self.n = max(self.lens)
+        packed = [pack_params(params) for _, params in prepared]
+        self.fparams = np.stack([fp for fp, _ in packed])
+        self.iparams = np.stack([ip for _, ip in packed])
+        cols = []
+        for (inputs, _), n in zip(prepared, self.lens):
+            cols.append([
+                np.concatenate([x, np.full(self.n - n, v, dtype=x.dtype)])
+                if n < self.n else x
+                for x, v in zip(inputs, _PAD_VALS)])
+        self._stacked = [np.stack([row[k] for row in cols]) for k in range(8)]
+
+        dims = [tuple(max(int(x), 1) for x in ip[2:7]) for ip in self.iparams]
+        self.groups = _timeline_vmem_chunks(
+            dims, block=min(self.block, max(self.n, 1)))
+        self._envelopes = []
+        self._state = []
+        for g in self.groups:
+            env = tuple(int(self.iparams[g, c].max()) if int(
+                self.iparams[g, c].max()) > 0 else 1 for c in (2, 3, 4, 5, 6))
+            self._envelopes.append(env)
+            self._state.append(timeline_init_state_batched(
+                len(g), env, jnp.asarray(self.iparams[g, 5])))
+        self.now = 0
+
+    def fingerprint(self) -> dict:
+        return {
+            "engine": self.engine,
+            "block": self.block,
+            "n": self.n,
+            "lens": list(self.lens),
+            "fparams": [[float(x) for x in row] for row in self.fparams],
+            "iparams": [[int(x) for x in row] for row in self.iparams],
+        }
+
+    def run_chunk(self, lo: int, hi: int, *, kernel_mode: str = "auto"):
+        """Advance every sim through the stacked-trace slice ``[lo, hi)``;
+        returns (latency, overhead, done), each f32 [B, hi - lo].  Commit-on-
+        success: a failed call leaves the stream unchanged."""
+        if lo != self.now:
+            raise ValueError(
+                f"{self.engine} chunk starts at {lo}, stream is at {self.now}")
+        if not lo < hi <= self.n:
+            raise ValueError(
+                f"{self.engine} chunk [{lo}, {hi}) outside stream [0, {self.n})")
+        L = hi - lo
+        if hi != self.n and L > self.block and L % self.block:
+            raise ValueError(
+                f"{self.engine} mid-stream chunk length {L} must be a "
+                f"multiple of block {self.block} (or <= block): mid-stream "
+                f"padding would perturb accelerator 0's issue clock")
+        cols = [s[:, lo:hi] for s in self._stacked]
+        pad = (-L) % min(self.block, L) if hi == self.n else 0
+        if pad:
+            # Final-chunk tail padding — the monolithic op's own discipline;
+            # padded outputs dropped, and no further chunk reads the state.
+            cols = [np.concatenate(
+                [x, np.full((x.shape[0], pad), v, dtype=x.dtype)], axis=1)
+                for x, v in zip(cols, _PAD_VALS)]
+        outs = [np.empty((len(self.specs), L), np.float32) for _ in range(3)]
+        new_state = []
+        for gi, g in enumerate(self.groups):
+            ys, st = timeline_sim_batched_carry(
+                *(jnp.asarray(c[g]) for c in cols),
+                self.fparams[g], self.iparams[g], self._state[gi],
+                block=self.block, kernel_mode=kernel_mode)
+            for o, y in zip(outs, ys):
+                o[g] = np.asarray(y)[:, :L]   # forces compute (commit gate)
+            new_state.append(st)
+        self._state = new_state
+        self.now = hi
+        return tuple(outs)
+
+    def export_state(self) -> dict:
+        out = {"now": np.array([self.now], np.int64)}
+        names = ("acc_next", "mshr_ring", "mshr_cnt", "port_free", "bank_free")
+        for gi, st in enumerate(self._state):
+            for name, arr in zip(names, st):
+                out[f"g{gi}_{name}"] = np.asarray(arr)
+        return out
+
+    def import_state(self, arrays: dict) -> None:
+        names = ("acc_next", "mshr_ring", "mshr_cnt", "port_free", "bank_free")
+        state = []
+        for gi in range(len(self.groups)):
+            st = []
+            for j, name in enumerate(names):
+                key = f"g{gi}_{name}"
+                if key not in arrays:
+                    raise ValueError(f"{self.engine} state missing array {key!r}")
+                arr = np.asarray(arrays[key])
+                ref = np.asarray(self._state[gi][j])
+                if tuple(arr.shape) != tuple(ref.shape):
+                    raise ValueError(
+                        f"{self.engine} state array {key!r} has shape "
+                        f"{tuple(arr.shape)}, expected {tuple(ref.shape)}")
+                st.append(jnp.asarray(arr.astype(ref.dtype)))
+            state.append(tuple(st))
+        self._state = state
+        self.now = int(np.asarray(arrays["now"]).reshape(-1)[0])
+
+    def finalize(self, latency: np.ndarray, overhead: np.ndarray,
+                 done: np.ndarray) -> List[TimelineResult]:
+        """Assemble per-spec results from the accumulated [B, n] output
+        buffers (each spec sliced back to its own unpadded length)."""
+        return [
+            TimelineResult(
+                latency=latency[i, :n], overhead=overhead[i, :n],
+                done=done[i, :n],
+                cache_hit=sp.events.cache_hit.astype(bool),
+                n_warm=sp.events.n_warm,
+            )
+            for i, (sp, n) in enumerate(zip(self.specs, self.lens))
+        ]

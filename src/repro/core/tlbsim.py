@@ -155,6 +155,48 @@ def _scan_tlb_batched(
     return hits.T
 
 
+@jax.jit
+def _scan_tlb_batched_carry(
+    set_idx: jnp.ndarray,   # int32 [B, L] one trace chunk
+    tag: jnp.ndarray,       # int32 [B, L]
+    tags0: jnp.ndarray,     # int32 [B, TS, W] carried state in
+    last0: jnp.ndarray,     # int32 [B, TS, W]
+    now0: jnp.ndarray,      # int32 scalar: accesses consumed before this chunk
+):
+    """Chunk-resumable :func:`_scan_tlb_batched`: explicit carried state.
+
+    The caller owns the initial state (:func:`padded_tlb_state`) and the
+    global access counter; feeding a trace in chunks through this scan is
+    bit-identical to one monolithic ``_scan_tlb_batched`` pass because the
+    carried (tags, last) and the ``now0``-offset timestamps are exactly the
+    mid-scan state of the single pass.  Returns ``(hits [B, L], tags, last)``.
+    """
+
+    def probe(tags_b, last_b, s, t, now):
+        row_t = tags_b[s]
+        row_l = last_b[s]
+        hit_vec = row_t == t
+        hit = jnp.any(hit_vec)
+        way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+        tags_b = tags_b.at[s, way].set(t)
+        last_b = last_b.at[s, way].set(now)
+        return tags_b, last_b, hit
+
+    def step(state, inp):
+        tags, last = state
+        s, t, now = inp
+        tags, last, hit = jax.vmap(probe, in_axes=(0, 0, 0, 0, None))(
+            tags, last, s, t, now
+        )
+        return (tags, last), hit
+
+    n = set_idx.shape[1]
+    now = now0.astype(jnp.int32) + jnp.arange(1, n + 1, dtype=jnp.int32)
+    (tags, last), hits = jax.lax.scan(
+        step, (tags0, last0), (set_idx.T, tag.T, now))
+    return hits.T, tags, last
+
+
 def simulate_tlb(
     vpns: np.ndarray,
     cfg: TLBConfig,

@@ -40,6 +40,11 @@ LINES_PER_2M = 1 << (21 - LINE_SHIFT)
 
 GIB = 1 << 30
 
+# Cache-line addresses above 2^52 lines (2^58 bytes) exceed any virtual
+# address space the simulators model and almost certainly indicate a units
+# bug (bytes where lines were meant, or float contamination).
+MAX_LINE_ADDR = 1 << 52
+
 WORKLOADS = (
     "hash_table",
     "bst_internal",
@@ -61,13 +66,68 @@ INSTR_PER_ACCESS: Dict[str, float] = {
 }
 
 
+def validate_lines(lines: np.ndarray, *, name: str = "trace") -> np.ndarray:
+    """Strictly validate a stream of cache-line addresses.
+
+    Rejects the inputs that would otherwise surface as garbage miss ratios
+    deep inside a sweep: zero-length streams, NaN/non-integral floats,
+    negative addresses, and addresses above ``MAX_LINE_ADDR`` (2^52 lines).
+    Returns the stream as a 1-D int64 array.  Every error names the offending
+    trace and the first bad index so the fix is at load time, not mid-sweep.
+    """
+    arr = np.asarray(lines)
+    if arr.ndim != 1:
+        raise ValueError(
+            f"{name}: trace must be a 1-D stream of line addresses, "
+            f"got shape {arr.shape}")
+    if arr.shape[0] == 0:
+        raise ValueError(
+            f"{name}: zero-length trace — nothing to simulate; check "
+            f"n_ops / max_accesses / interleave truncation upstream")
+    if np.issubdtype(arr.dtype, np.floating):
+        bad = ~np.isfinite(arr)
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"{name}: non-finite address at index {i} ({arr[i]!r}); "
+                f"traces must be integer cache-line addresses")
+        if not np.array_equal(arr, np.floor(arr)):
+            i = int(np.argmax(arr != np.floor(arr)))
+            raise ValueError(
+                f"{name}: non-integral address at index {i} ({arr[i]!r}); "
+                f"traces must be integer cache-line addresses")
+        arr = arr.astype(np.int64)
+    elif not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"{name}: trace dtype {arr.dtype} is not an address type; "
+            f"expected integer cache-line addresses")
+    if arr.min() < 0:
+        i = int(np.argmax(arr < 0))
+        raise ValueError(
+            f"{name}: negative address at index {i} ({int(arr[i])}); "
+            f"line addresses must be non-negative")
+    if arr.max() > MAX_LINE_ADDR:
+        i = int(np.argmax(arr > MAX_LINE_ADDR))
+        raise ValueError(
+            f"{name}: address at index {i} ({int(arr[i])}) exceeds 2^52 "
+            f"lines — bytes passed where line addresses were expected?")
+    return arr.astype(np.int64, copy=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class Trace:
-    """A stream of cache-line addresses plus workload metadata."""
+    """A stream of cache-line addresses plus workload metadata.
+
+    Construction validates the stream (:func:`validate_lines`) so bad inputs
+    fail here, at load time, with an actionable error."""
 
     name: str
     lines: np.ndarray  # int64 [N] cache-line addresses
     footprint_bytes: int
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "lines", validate_lines(self.lines, name=self.name))
 
     @property
     def num_accesses(self) -> int:

@@ -117,6 +117,133 @@ def _system_batched_kernel(
     jax.lax.fori_loop(0, block, access, 0)
 
 
+def _system_batched_carry_kernel(
+    c_set_ref, c_tag_ref,   # int32 [B, BLK] cache (set, tag) views
+    a_set_ref, a_tag_ref,   # int32 [B, BLK] accel-TLB views
+    m_set_ref, m_tag_ref,   # int32 [B, BLK] mem-TLB views
+    flags_ref,              # int32 [B, 3]
+    c_tags_in, c_last_in,   # int32 [B, CS, CW] carried state in
+    a_tags_in, a_last_in,   # int32 [B, AS, AW]
+    m_tags_in, m_last_in,   # int32 [B, MS, MW]
+    nb_ref,                 # int32 [1, 1] global access count before chunk
+    hit_ref,                # int32 [B, BLK] packed hit bits out
+    c_tags, c_last,         # int32 [B, CS, CW] carried state out = working
+    a_tags, a_last,
+    m_tags, m_last,
+    *,
+    block: int,
+    num_cfgs: int,
+):
+    """Chunk-resumable variant of :func:`_system_batched_kernel`: the six
+    state-out refs (constant-index BlockSpecs, VMEM-resident across the
+    sequential grid) are the working state, loaded from the carried state-in
+    at grid step 0 — the caller owns the poison init.  Timestamps continue
+    the global access counter, so chunked execution is bit-identical to the
+    monolithic kernel."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _load():
+        c_tags[...] = c_tags_in[...]
+        c_last[...] = c_last_in[...]
+        a_tags[...] = a_tags_in[...]
+        a_last[...] = a_last_in[...]
+        m_tags[...] = m_tags_in[...]
+        m_last[...] = m_last_in[...]
+
+    base = nb_ref[0, 0] + i * block
+
+    def access(j, _):
+        now = base + j + 1
+
+        def per_cfg(b, _):
+            has_c = flags_ref[b, 0] > 0
+            has_a = flags_ref[b, 1] > 0
+            miss_only = flags_ref[b, 2] > 0
+
+            def probe(tags_scr, last_scr, s, t, do_update):
+                row_t = tags_scr[b, s, :]
+                row_l = last_scr[b, s, :]
+                hit_vec = row_t == t
+                hit = jnp.any(hit_vec)
+                way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+                tags_scr[b, s, way] = jnp.where(do_update, t, tags_scr[b, s, way])
+                last_scr[b, s, way] = jnp.where(do_update, now, last_scr[b, s, way])
+                return hit
+
+            c_raw = probe(c_tags, c_last, c_set_ref[b, j], c_tag_ref[b, j], has_c)
+            c_hit = has_c & c_raw
+            do_a = jnp.where(miss_only, ~c_hit, jnp.bool_(True)) & has_a
+            a_raw = probe(a_tags, a_last, a_set_ref[b, j], a_tag_ref[b, j], do_a)
+            a_hit = jnp.where(
+                has_a, jnp.where(do_a, a_raw, jnp.bool_(True)), jnp.bool_(False)
+            )
+            m_raw = probe(m_tags, m_last, m_set_ref[b, j], m_tag_ref[b, j], ~c_hit)
+            m_hit = jnp.where(~c_hit, m_raw, jnp.bool_(True))
+
+            hit_ref[b, j] = (
+                c_hit.astype(jnp.int32)
+                | (a_hit.astype(jnp.int32) << 1)
+                | (m_hit.astype(jnp.int32) << 2)
+            )
+            return 0
+
+        jax.lax.fori_loop(0, num_cfgs, per_cfg, 0)
+        return 0
+
+    jax.lax.fori_loop(0, block, access, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def system_sim_batched_pallas_carry(
+    c_set: jnp.ndarray, c_tag: jnp.ndarray,   # int32 [B, L]
+    a_set: jnp.ndarray, a_tag: jnp.ndarray,
+    m_set: jnp.ndarray, m_tag: jnp.ndarray,
+    flags: jnp.ndarray,                       # int32 [B, 3]
+    state,                                    # 6-tuple int32 [B, S, W]
+    now0: jnp.ndarray,                        # int32 scalar
+    *,
+    block: int = 512,
+    interpret: bool = False,
+):
+    """Chunk-resumable batched joint-pipeline simulation; returns
+    ``((cache_hit, accel_tlb_hit, mem_tlb_hit), state')``."""
+    num_cfgs, n = c_set.shape
+    block = min(block, n)
+    assert n % block == 0, f"chunk length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    stream = pl.BlockSpec((num_cfgs, block), lambda i: (0, i))
+
+    def whole(arr):
+        return pl.BlockSpec(arr.shape, lambda i: (0,) * arr.ndim)
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _system_batched_carry_kernel, block=block, num_cfgs=num_cfgs,
+        ),
+        grid=grid,
+        in_specs=[stream] * 6
+        + [pl.BlockSpec((num_cfgs, 3), lambda i: (0, 0))]
+        + [whole(s) for s in state]
+        + [pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[stream] + [whole(s) for s in state],
+        out_shape=[jax.ShapeDtypeStruct((num_cfgs, n), jnp.int32)]
+        + [jax.ShapeDtypeStruct(s.shape, jnp.int32) for s in state],
+        interpret=interpret,
+    )(c_set.astype(jnp.int32), c_tag.astype(jnp.int32),
+      a_set.astype(jnp.int32), a_tag.astype(jnp.int32),
+      m_set.astype(jnp.int32), m_tag.astype(jnp.int32),
+      flags.astype(jnp.int32),
+      *(s.astype(jnp.int32) for s in state),
+      jnp.asarray(now0, jnp.int32).reshape(1, 1))
+    hits = outs[0]
+    return (
+        (hits & 1).astype(bool),
+        ((hits >> 1) & 1).astype(bool),
+        ((hits >> 2) & 1).astype(bool),
+    ), tuple(outs[1:])
+
+
 @functools.partial(
     jax.jit, static_argnames=("geom", "valid", "block", "interpret"))
 def system_sim_batched_pallas(

@@ -14,10 +14,17 @@ from typing import Tuple
 import jax.numpy as jnp
 
 from repro.kernels.common import SWEEP_MODES, VALID_MODES, resolve_mode
-from repro.kernels.system_sim.kernel import system_sim_batched_pallas
-from repro.kernels.system_sim.ref import system_sim_batched_ref
+from repro.kernels.system_sim.kernel import (
+    system_sim_batched_pallas,
+    system_sim_batched_pallas_carry,
+)
+from repro.kernels.system_sim.ref import (
+    system_sim_batched_carry_ref,
+    system_sim_batched_ref,
+)
 
-__all__ = ["system_sim_batched", "resolve_system_mode"]
+__all__ = ["system_sim_batched", "system_sim_batched_carry",
+           "resolve_system_mode"]
 
 
 def resolve_system_mode(kernel_mode: str) -> str:
@@ -63,3 +70,50 @@ def system_sim_batched(
     return system_sim_batched_pallas(
         c_set, c_tag, a_set, a_tag, m_set, m_tag, flags, geom, valid,
         block=block, interpret=(mode == "pallas_interpret"))
+
+
+def system_sim_batched_carry(
+    c_set: jnp.ndarray, c_tag: jnp.ndarray,   # int32 [B, L] one trace chunk
+    a_set: jnp.ndarray, a_tag: jnp.ndarray,
+    m_set: jnp.ndarray, m_tag: jnp.ndarray,
+    flags: jnp.ndarray,                       # int32 [B, 3]
+    state,                                    # 6-tuple int32 [B, S, W]
+    now0: int,                                # accesses consumed before chunk
+    *,
+    block: int = 512,
+    kernel_mode: str = "auto",
+):
+    """Chunk-resumable :func:`system_sim_batched`: run ONE trace chunk
+    against caller-owned carried state (three
+    :func:`repro.core.tlbsim.padded_tlb_state` pairs) and the global access
+    counter.  Returns ``((c, a, m) hit bits bool [B, L], state')``; chunked
+    execution is bit-identical to the monolithic op in any mode and across
+    mode changes at chunk boundaries.
+
+    State layout contract: each structure's carried state must include one
+    spare *parked* set row at its last index that no real access ever
+    indexes; Pallas chunks whose length is not a block multiple are padded
+    with accesses into those rows (stamps live only there, padded hit bits
+    dropped), so mid-stream padding is unobservable."""
+    mode = resolve_system_mode(kernel_mode)
+    state = tuple(state)
+    if mode == "reference":
+        bools = tuple(flags[:, c].astype(bool) for c in range(3))
+        return system_sim_batched_carry_ref(
+            (c_set, c_tag, a_set, a_tag, m_set, m_tag), bools,
+            state, jnp.asarray(now0))
+    n = int(c_set.shape[1])
+    pad = (-n) % min(block, n) if n else 0
+    streams = [c_set, c_tag, a_set, a_tag, m_set, m_tag]
+    if pad:
+        for k in range(3):
+            parked = int(state[2 * k].shape[1]) - 1
+            s, t = streams[2 * k], streams[2 * k + 1]
+            streams[2 * k] = jnp.concatenate(
+                [s, jnp.full((s.shape[0], pad), parked, s.dtype)], axis=1)
+            streams[2 * k + 1] = jnp.concatenate(
+                [t, jnp.zeros((t.shape[0], pad), t.dtype)], axis=1)
+    hits, state = system_sim_batched_pallas_carry(
+        *streams, flags, state, now0,
+        block=block, interpret=(mode == "pallas_interpret"))
+    return tuple(h[:, :n] for h in hits), state

@@ -77,3 +77,56 @@ def system_sim_batched_ref(
     xs = tuple(x.T for x in inputs) + (now,)
     (_, ys) = jax.lax.scan(step, state0, xs)
     return tuple(y.T for y in ys)
+
+
+@jax.jit
+def system_sim_batched_carry_ref(
+    inputs,   # 6 x int32 [B, L]: one trace chunk's key streams
+    flags,    # 3 x bool  [B]
+    state,    # 6 x int32 [B, S, W]: carried (tags, last) x 3 structures
+    now0,     # int32 scalar: accesses consumed before this chunk
+):
+    """Chunk-resumable :func:`system_sim_batched_ref`: explicit carried state.
+
+    The caller owns the initial state (three :func:`padded_tlb_state` pairs)
+    and the global access counter; feeding the trace in chunks is
+    bit-identical to one monolithic pass.  Returns ``((c, a, m) hit bits,
+    state')``.
+    """
+    (c_set, *_) = inputs
+
+    def probe(tags, last, s, t, now, do_update):
+        row_t = tags[s]
+        hit_vec = row_t == t
+        hit = jnp.any(hit_vec)
+        way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(last[s]))
+        tags = tags.at[s, way].set(jnp.where(do_update, t, tags[s, way]))
+        last = last.at[s, way].set(jnp.where(do_update, now, last[s, way]))
+        return tags, last, hit
+
+    def step_one(state_b, flags_b, inp_b, now):
+        ct, cl, at, al, mt, ml = state_b
+        has_c, has_a, miss_only = flags_b
+        cs_i, ctag_i, as_i, atag_i, ms_i, mtag_i = inp_b
+        ct, cl, c_raw = probe(ct, cl, cs_i, ctag_i, now, has_c)
+        c_hit = jnp.where(has_c, c_raw, jnp.bool_(False))
+        do_a = jnp.where(miss_only, ~c_hit, jnp.bool_(True)) & has_a
+        at, al, a_raw = probe(at, al, as_i, atag_i, now, do_a)
+        a_hit = jnp.where(
+            has_a, jnp.where(do_a, a_raw, jnp.bool_(True)), jnp.bool_(False)
+        )
+        mt, ml, m_raw = probe(mt, ml, ms_i, mtag_i, now, ~c_hit)
+        m_hit = jnp.where(~c_hit, m_raw, jnp.bool_(True))
+        return (ct, cl, at, al, mt, ml), (c_hit, a_hit, m_hit)
+
+    vstep = jax.vmap(step_one, in_axes=(0, 0, 0, None))
+
+    def step(carry, inp):
+        *streams, now = inp
+        return vstep(carry, flags, tuple(streams), now)
+
+    n = c_set.shape[1]
+    now = now0.astype(jnp.int32) + jnp.arange(1, n + 1, dtype=jnp.int32)
+    xs = tuple(x.T for x in inputs) + (now,)
+    (state, ys) = jax.lax.scan(step, tuple(state), xs)
+    return tuple(y.T for y in ys), state

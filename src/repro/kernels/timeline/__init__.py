@@ -4,9 +4,12 @@ from repro.kernels.timeline.ops import (
     TimelineParams,
     pack_params,
     resolve_timeline_mode,
+    timeline_init_state_batched,
     timeline_sim,
     timeline_sim_batched,
+    timeline_sim_batched_carry,
 )
 
 __all__ = ["TimelineParams", "timeline_sim", "timeline_sim_batched",
+           "timeline_sim_batched_carry", "timeline_init_state_batched",
            "pack_params", "resolve_timeline_mode", "FP_COLS", "IP_COLS"]

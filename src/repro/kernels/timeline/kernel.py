@@ -134,6 +134,110 @@ def _timeline_batched_kernel(
     jax.lax.fori_loop(0, block, body, 0)
 
 
+def _timeline_batched_carry_kernel(
+    a_ref, p_ref, bd_ref, bp_ref,   # int32 [B, BLK] ids
+    c_ref, th_ref, mh_ref,          # int32 [B, BLK] hit bits
+    pen_ref,                        # f32   [B, BLK]
+    fp_ref,                         # f32   [B, 8]
+    ip_ref,                         # int32 [B, 7]
+    acc_in, mshr_in, cnt_in, port_in, bank_in,       # carried state in
+    lat_ref, ov_ref, done_ref,      # f32   [B, BLK] outputs
+    acc_scr, mshr_scr, cnt_scr, port_scr, bank_scr,  # carried state out =
+    *,                                               # working state
+    block: int,
+    num_sims: int,
+):
+    """Chunk-resumable variant of :func:`_timeline_batched_kernel`: the five
+    state-out refs (constant-index BlockSpecs, VMEM-resident across the
+    sequential grid) are the working state, loaded from the carried state-in
+    at grid step 0 — the caller owns the zero/poison init.  Queueing state
+    holds absolute times, so no access counter is threaded; chunked execution
+    is bit-identical to the monolithic kernel."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _load():
+        acc_scr[...] = acc_in[...]
+        mshr_scr[...] = mshr_in[...]
+        cnt_scr[...] = cnt_in[...]
+        port_scr[...] = port_in[...]
+        bank_scr[...] = bank_in[...]
+
+    def body(j, _):
+        def per_sim(b, _):
+            state = (acc_scr[b], mshr_scr[b], cnt_scr[b],
+                     port_scr[b], bank_scr[b])
+            inp = (a_ref[b, j], p_ref[b, j], bd_ref[b, j], bp_ref[b, j],
+                   c_ref[b, j], th_ref[b, j], mh_ref[b, j], pen_ref[b, j])
+            (acc, mshr, cnt, port, bank), (lat, ov, done) = timeline_step_dyn(
+                state, inp, fp_ref[b], ip_ref[b])
+            acc_scr[b] = acc
+            mshr_scr[b] = mshr
+            cnt_scr[b] = cnt
+            port_scr[b] = port
+            bank_scr[b] = bank
+            lat_ref[b, j] = lat
+            ov_ref[b, j] = ov
+            done_ref[b, j] = done
+            return 0
+
+        jax.lax.fori_loop(0, num_sims, per_sim, 0)
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def timeline_sim_batched_pallas_carry(
+    accel: jnp.ndarray,      # int32 [B, L] one trace chunk
+    part: jnp.ndarray,
+    bank_data: jnp.ndarray,
+    bank_pte: jnp.ndarray,
+    cache_hit: jnp.ndarray,
+    tlb_hit: jnp.ndarray,
+    mem_hit: jnp.ndarray,
+    pen: jnp.ndarray,        # f32 [B, L]
+    fparams: jnp.ndarray,    # f32 [B, 8]
+    iparams: jnp.ndarray,    # int32 [B, 7]
+    state,                   # 5-tuple carried queueing state
+    *,
+    block: int = 512,
+    interpret: bool = False,
+):
+    """Chunk-resumable batched timeline simulation; returns
+    ``((latency, overhead, done), state')``."""
+    B, n = accel.shape
+    block = min(block, n)
+    assert n % block == 0, f"chunk length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    stream = pl.BlockSpec((B, block), lambda i: (0, i))
+    whole = lambda c: pl.BlockSpec((B, c), lambda i: (0, 0))
+
+    def whole_nd(arr):
+        return pl.BlockSpec(arr.shape, lambda i: (0,) * arr.ndim)
+
+    state_dtypes = (jnp.float32, jnp.float32, jnp.int32, jnp.float32,
+                    jnp.float32)
+    outs = pl.pallas_call(
+        functools.partial(
+            _timeline_batched_carry_kernel, block=block, num_sims=B),
+        grid=grid,
+        in_specs=[stream] * 8 + [whole(8), whole(7)]
+        + [whole_nd(s) for s in state],
+        out_specs=[stream] * 3 + [whole_nd(s) for s in state],
+        out_shape=[jax.ShapeDtypeStruct((B, n), jnp.float32)] * 3
+        + [jax.ShapeDtypeStruct(s.shape, d)
+           for s, d in zip(state, state_dtypes)],
+        interpret=interpret,
+    )(accel.astype(jnp.int32), part.astype(jnp.int32),
+      bank_data.astype(jnp.int32), bank_pte.astype(jnp.int32),
+      cache_hit.astype(jnp.int32), tlb_hit.astype(jnp.int32),
+      mem_hit.astype(jnp.int32), pen.astype(jnp.float32),
+      fparams.astype(jnp.float32), iparams.astype(jnp.int32),
+      *(s.astype(d) for s, d in zip(state, state_dtypes)))
+    return tuple(outs[:3]), tuple(outs[3:])
+
+
 @functools.partial(
     jax.jit, static_argnames=("envelope", "block", "interpret"))
 def timeline_sim_batched_pallas(

@@ -17,6 +17,7 @@ import numpy as np
 from repro.kernels.common import SWEEP_MODES, VALID_MODES, resolve_mode
 from repro.kernels.timeline.kernel import (
     timeline_sim_batched_pallas,
+    timeline_sim_batched_pallas_carry,
     timeline_sim_pallas,
 )
 from repro.kernels.timeline.ref import (
@@ -24,11 +25,14 @@ from repro.kernels.timeline.ref import (
     IP_COLS,
     TimelineParams,
     pack_params,
+    timeline_init_state_batched,
+    timeline_scan_batched_carry_ref,
     timeline_scan_batched_ref,
     timeline_scan_ref,
 )
 
 __all__ = ["TimelineParams", "timeline_sim", "timeline_sim_batched",
+           "timeline_sim_batched_carry", "timeline_init_state_batched",
            "pack_params", "resolve_timeline_mode", "FP_COLS", "IP_COLS"]
 
 
@@ -144,3 +148,44 @@ def timeline_sim_batched(
         jnp.asarray(fparams), jnp.asarray(ip), envelope,
         block=block, interpret=(mode == "pallas_interpret"))
     return lat[:, :n], ov[:, :n], done[:, :n]
+
+
+def timeline_sim_batched_carry(
+    accel: jnp.ndarray,      # int32 [B, L] one trace chunk
+    part: jnp.ndarray,
+    bank_data: jnp.ndarray,
+    bank_pte: jnp.ndarray,
+    cache_hit: jnp.ndarray,
+    tlb_hit: jnp.ndarray,
+    mem_hit: jnp.ndarray,
+    pen: jnp.ndarray,        # f32 [B, L]
+    fparams: np.ndarray,     # f32 [B, 8]
+    iparams: np.ndarray,     # int32 [B, 7]
+    state,                   # 5-tuple carried queueing state
+    *,
+    block: int = 512,
+    kernel_mode: str = "auto",
+):
+    """Chunk-resumable :func:`timeline_sim_batched`: run ONE trace chunk
+    against caller-owned carried queueing state (initialise with
+    :func:`timeline_init_state_batched` on the batch's resource envelope).
+    Returns ``((latency, overhead, done) f32 [B, L], state')``; chunked
+    execution is bit-identical to the monolithic op in any mode and across
+    mode changes at chunk boundaries (state layout and step function are
+    shared by all backends).  Unlike the monolithic op this does NOT pad the
+    chunk — mid-stream padding would perturb accelerator 0's issue clock —
+    so a Pallas-mode chunk length must be a block multiple (or a single
+    short block, ``L <= block``); the stream layer enforces that.
+    """
+    ip = np.asarray(iparams)
+    mode = resolve_timeline_mode(kernel_mode, batch=int(accel.shape[0]))
+    if mode == "reference" or int(accel.shape[1]) == 0:
+        return timeline_scan_batched_carry_ref(
+            accel, part, bank_data, bank_pte,
+            cache_hit, tlb_hit, mem_hit, pen,
+            jnp.asarray(fparams), jnp.asarray(ip), tuple(state))
+    return timeline_sim_batched_pallas_carry(
+        accel, part, bank_data, bank_pte,
+        cache_hit, tlb_hit, mem_hit, pen,
+        jnp.asarray(fparams), jnp.asarray(ip), tuple(state),
+        block=block, interpret=(mode == "pallas_interpret"))

@@ -378,6 +378,38 @@ def timeline_scan_batched_ref(
     return tuple(y.T for y in ys)
 
 
+@jax.jit
+def timeline_scan_batched_carry_ref(
+    accel: jnp.ndarray,      # int32 [B, L] one trace chunk
+    part: jnp.ndarray,
+    bank_data: jnp.ndarray,
+    bank_pte: jnp.ndarray,
+    cache_hit: jnp.ndarray,
+    tlb_hit: jnp.ndarray,
+    mem_hit: jnp.ndarray,
+    pen: jnp.ndarray,        # f32 [B, L]
+    fparams: jnp.ndarray,    # f32 [B, 8]
+    iparams: jnp.ndarray,    # int32 [B, 7]
+    state,                   # 5-tuple: carried queueing state (see
+                             # timeline_init_state_batched for layout)
+):
+    """Chunk-resumable :func:`timeline_scan_batched_ref`: explicit carried
+    state.  The queueing state holds *absolute* times, so unlike the LRU
+    scans no global access counter is threaded — carrying the five state
+    arrays across chunks is bit-identical to one monolithic pass.  Returns
+    ``((latency, overhead, done), state')``.
+    """
+    vstep = jax.vmap(timeline_step_dyn, in_axes=(0, 0, 0, 0))
+
+    def step(carry, inp):
+        return vstep(carry, inp, fparams, iparams)
+
+    xs = tuple(x.T for x in (accel, part, bank_data, bank_pte,
+                             cache_hit, tlb_hit, mem_hit, pen))
+    state, ys = jax.lax.scan(step, tuple(state), xs)
+    return tuple(y.T for y in ys), state
+
+
 @functools.partial(jax.jit, static_argnames=("params",))
 def timeline_scan_ref(
     accel: jnp.ndarray,      # int32 [N] issuing accelerator id

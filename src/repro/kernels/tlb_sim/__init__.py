@@ -1,1 +1,5 @@
-from repro.kernels.tlb_sim.ops import tlb_sim, tlb_sim_batched  # noqa: F401
+from repro.kernels.tlb_sim.ops import (  # noqa: F401
+    tlb_sim,
+    tlb_sim_batched,
+    tlb_sim_batched_carry,
+)

@@ -147,6 +147,95 @@ def _tlb_batched_kernel(
     jax.lax.fori_loop(0, block, access, 0)
 
 
+def _tlb_batched_carry_kernel(
+    set_ref, tag_ref,       # int32 [B, BLK] trace block
+    tags_in, last_in,       # int32 [B, TS, W] carried state in (whole array)
+    nb_ref,                 # int32 [1, 1] global access count before chunk
+    hit_ref,                # int32 [B, BLK] output
+    tags_out, last_out,     # int32 [B, TS, W] carried state out (whole array)
+    *,
+    block: int,
+    num_cfgs: int,
+):
+    """Chunk-resumable variant of :func:`_tlb_batched_kernel`.
+
+    The state-out refs use a constant-index BlockSpec, so they stay
+    VMEM-resident across the (sequential) grid — they ARE the working state:
+    initialised from the carried state-in at grid step 0 (the caller owns the
+    poison init), mutated in place, and flushed back to HBM once at the end.
+    Timestamps continue the global access counter (``nb_ref``), so chunked
+    execution is bit-identical to the monolithic kernel.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _load():
+        tags_out[...] = tags_in[...]
+        last_out[...] = last_in[...]
+
+    base = nb_ref[0, 0] + i * block
+
+    def access(j, _):
+        now = base + j + 1
+
+        def per_cfg(b, _):
+            s = set_ref[b, j]
+            t = tag_ref[b, j]
+            row_t = tags_out[b, s, :]
+            row_l = last_out[b, s, :]
+            hit_vec = row_t == t
+            hit = jnp.any(hit_vec)
+            way = jnp.where(hit, jnp.argmax(hit_vec), jnp.argmin(row_l))
+            tags_out[b, s, way] = t
+            last_out[b, s, way] = now
+            hit_ref[b, j] = hit.astype(jnp.int32)
+            return 0
+
+        jax.lax.fori_loop(0, num_cfgs, per_cfg, 0)
+        return 0
+
+    jax.lax.fori_loop(0, block, access, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def tlb_sim_batched_pallas_carry(
+    set_idx: jnp.ndarray,   # int32 [B, L]
+    tag: jnp.ndarray,       # int32 [B, L]
+    tags: jnp.ndarray,      # int32 [B, TS, W] carried state
+    last: jnp.ndarray,      # int32 [B, TS, W]
+    now0: jnp.ndarray,      # int32 scalar
+    *,
+    block: int = 512,
+    interpret: bool = False,
+):
+    """Chunk-resumable batched LRU simulation; returns (hits, tags', last')."""
+    num_cfgs, n = set_idx.shape
+    total_sets, ways = tags.shape[1], tags.shape[2]
+    block = min(block, n)
+    assert n % block == 0, f"chunk length {n} must be a multiple of block {block}"
+    grid = (n // block,)
+    stream = pl.BlockSpec((num_cfgs, block), lambda i: (0, i))
+    whole = pl.BlockSpec((num_cfgs, total_sets, ways), lambda i: (0, 0, 0))
+    hits, tags, last = pl.pallas_call(
+        functools.partial(
+            _tlb_batched_carry_kernel, block=block, num_cfgs=num_cfgs,
+        ),
+        grid=grid,
+        in_specs=[stream, stream, whole, whole,
+                  pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_specs=[stream, whole, whole],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_cfgs, n), jnp.int32),
+            jax.ShapeDtypeStruct((num_cfgs, total_sets, ways), jnp.int32),
+            jax.ShapeDtypeStruct((num_cfgs, total_sets, ways), jnp.int32),
+        ],
+        interpret=interpret,
+    )(set_idx.astype(jnp.int32), tag.astype(jnp.int32),
+      tags.astype(jnp.int32), last.astype(jnp.int32),
+      jnp.asarray(now0, jnp.int32).reshape(1, 1))
+    return hits.astype(bool), tags, last
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("total_sets", "ways", "valid_ways", "block", "interpret"),

@@ -5,7 +5,7 @@ from typing import Tuple
 
 import jax.numpy as jnp
 
-from repro.core.tlbsim import _scan_tlb, _scan_tlb_batched
+from repro.core.tlbsim import _scan_tlb, _scan_tlb_batched, _scan_tlb_batched_carry
 
 
 def tlb_sim_ref(set_idx: jnp.ndarray, tag: jnp.ndarray, total_sets: int, ways: int) -> jnp.ndarray:
@@ -22,3 +22,14 @@ def tlb_sim_batched_ref(
 ) -> jnp.ndarray:
     """Hit bits (bool [B, N]) for B configs advancing through one trace pass."""
     return _scan_tlb_batched(set_idx, tag, total_sets, ways, valid_ways)
+
+
+def tlb_sim_batched_carry_ref(
+    set_idx: jnp.ndarray,
+    tag: jnp.ndarray,
+    tags: jnp.ndarray,
+    last: jnp.ndarray,
+    now0,
+):
+    """Chunk-resumable batched scan: (hits [B, L], tags', last')."""
+    return _scan_tlb_batched_carry(set_idx, tag, tags, last, jnp.asarray(now0))

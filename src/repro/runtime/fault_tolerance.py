@@ -9,9 +9,10 @@ reassigned without replaying any loader state.
 from __future__ import annotations
 
 import dataclasses
+import random
 import signal
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -55,31 +56,117 @@ class HeartbeatTracker:
 
 
 class PreemptionHandler:
-    """SIGTERM => checkpoint-and-exit at the next step boundary."""
+    """SIGTERM/SIGINT => checkpoint-and-exit at the next step boundary.
 
-    def __init__(self, install: bool = True):
+    Any *user-installed* handler that was registered before us is chained
+    (called after ``requested`` is set) instead of silently replaced; the
+    interpreter defaults (``SIG_DFL`` / ``SIG_IGN`` / Python's
+    ``default_int_handler``, which would raise ``KeyboardInterrupt`` straight
+    through the graceful shutdown) are replaced, which is the point of
+    installing a preemption handler at all.  ``uninstall()`` restores
+    whatever was there before.
+    """
+
+    SIGNALS = (signal.SIGTERM, signal.SIGINT)
+
+    def __init__(self, install: bool = True,
+                 signals: Optional[Tuple[int, ...]] = None):
         self.requested = False
+        self._previous: Dict[int, object] = {}
         if install:
-            try:
-                signal.signal(signal.SIGTERM, self._on_signal)
-            except ValueError:
-                pass  # not main thread (tests)
+            for sig in (signals if signals is not None else self.SIGNALS):
+                try:
+                    self._previous[sig] = signal.signal(sig, self._on_signal)
+                except ValueError:
+                    pass  # not main thread (tests)
 
-    def _on_signal(self, *_):
+    def _on_signal(self, signum, frame):
         self.requested = True
+        prev = self._previous.get(signum)
+        if callable(prev) and prev is not signal.default_int_handler:
+            prev(signum, frame)
+
+    def uninstall(self):
+        """Restore the handlers that were installed before us."""
+        for sig, prev in self._previous.items():
+            try:
+                signal.signal(sig, prev)
+            except (ValueError, TypeError):
+                pass
+        self._previous = {}
+
+
+# XLA surfaces runtime faults as XlaRuntimeError (a RuntimeError subclass)
+# whose message starts with an absl status code.  These codes are the
+# machine-transient ones (device OOM, preempted backend, flaky transport);
+# INVALID_ARGUMENT / compile-time failures are NOT here on purpose — they are
+# deterministic and retrying them just burns the budget before surfacing.
+_TRANSIENT_STATUS = ("RESOURCE_EXHAUSTED", "DEADLINE_EXCEEDED", "UNAVAILABLE",
+                     "ABORTED", "CANCELLED", "INTERNAL", "UNKNOWN",
+                     "out of memory", "OOM")
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Is this exception a transient runtime fault worth retrying?
+
+    Policy: deterministic program bugs (ValueError, TypeError, KeyError,
+    AssertionError, ...) are never transient.  XLA runtime errors are
+    transient only for the retryable status codes above.  Plain RuntimeError
+    and OS-level I/O hiccups (OSError family, MemoryError, TimeoutError)
+    are treated as transient.
+    """
+    try:
+        from jax.errors import JaxRuntimeError
+    except Exception:  # pragma: no cover - ancient jax
+        JaxRuntimeError = ()
+    if JaxRuntimeError and isinstance(exc, JaxRuntimeError):
+        msg = str(exc)
+        return any(code in msg for code in _TRANSIENT_STATUS)
+    if isinstance(exc, (MemoryError, TimeoutError, ConnectionError, OSError)):
+        return True
+    # RuntimeError (minus the XLA subclass handled above and the
+    # deterministic stdlib subclasses) is the conventional "environment
+    # misbehaved" type; everything else is a program bug.
+    return isinstance(exc, RuntimeError) and not isinstance(
+        exc, (NotImplementedError, RecursionError))
+
+
+def backoff_delays(retries: int, *, base_s: float = 0.05, cap_s: float = 2.0,
+                   jitter: float = 0.25,
+                   rng: Optional[random.Random] = None) -> List[float]:
+    """Bounded exponential backoff schedule with multiplicative jitter."""
+    rng = rng or random.Random()
+    out = []
+    for attempt in range(retries):
+        d = min(base_s * (2.0 ** attempt), cap_s)
+        out.append(d * (1.0 + jitter * rng.random()))
+    return out
 
 
 def retry_step(fn: Callable, *args, retries: int = 2,
-               on_retry: Optional[Callable[[int, BaseException], None]] = None):
-    """Run one step with bounded retry (transient XLA/runtime faults)."""
+               on_retry: Optional[Callable[[int, BaseException], None]] = None,
+               base_delay_s: float = 0.05, max_delay_s: float = 2.0,
+               rng: Optional[random.Random] = None):
+    """Run one step with bounded retry of *transient* runtime faults.
+
+    Only exceptions classified by :func:`is_transient` are retried —
+    deterministic bugs (ValueError/TypeError/...) surface immediately instead
+    of burning every retry first.  Retries sleep a bounded exponential
+    backoff with jitter (``base_delay_s`` doubling up to ``max_delay_s``);
+    pass ``base_delay_s=0`` to disable sleeping (tests).
+    """
+    delays = backoff_delays(retries, base_s=base_delay_s, cap_s=max_delay_s,
+                            rng=rng)
     for attempt in range(retries + 1):
         try:
             return fn(*args)
-        except Exception as e:  # noqa: BLE001
-            if attempt == retries:
+        except Exception as e:
+            if attempt == retries or not is_transient(e):
                 raise
             if on_retry:
                 on_retry(attempt, e)
+            if delays[attempt] > 0:
+                time.sleep(delays[attempt])
 
 
 @dataclasses.dataclass

@@ -1,0 +1,88 @@
+"""Fault-injection harness for the crash-safe sweep orchestrator.
+
+Three seams, matching ``SweepRunConfig``'s test hooks:
+
+* :func:`kill_after` — a simulated **hard kill** (power loss, OOM-killer,
+  preemption without grace).  Raised from ``on_chunk_committed``, i.e. the
+  instant *after* a chunk's checkpoint is durably on disk — the worst
+  legitimate crash point: everything later is torn away, everything earlier
+  must survive.  ``SimulatedKill`` is a BaseException so no retry machinery
+  can absorb it (a real kill cannot be caught either).
+
+* :func:`transient_faults` — simulated **transient runtime faults**
+  (``RESOURCE_EXHAUSTED``, the XLA OOM status), raised from ``fault_hook``
+  *before* a chunk attempt executes.  Filtered by engine/mode so a test can
+  e.g. fail every non-``reference`` attempt and force the full
+  retry -> halve -> downgrade ladder.
+
+* :func:`corrupt_file` — post-crash disk damage: flip one payload byte or
+  truncate the blob, to prove resume *refuses* rather than trusts it.
+"""
+from __future__ import annotations
+
+import pathlib
+
+
+class SimulatedKill(BaseException):
+    """A process death at a chunk boundary (after the checkpoint commit).
+
+    BaseException on purpose: the orchestrator's transient-fault ladder
+    catches ``Exception`` only, so a kill — like a real SIGKILL — must tear
+    straight through it.
+    """
+
+
+def kill_after(n_chunks: int):
+    """``on_chunk_committed`` hook: die once ``n_chunks`` chunks committed.
+
+    The hook fires after commit ``i`` (0-based) with its checkpoint already
+    fsync'd + renamed, so killing at ``i == n_chunks - 1`` leaves exactly
+    ``n_chunks`` chunks' worth of durable state behind.
+    """
+
+    def hook(chunk_idx: int) -> None:
+        if chunk_idx + 1 >= n_chunks:
+            raise SimulatedKill(
+                f"simulated process death after chunk commit #{chunk_idx}")
+
+    return hook
+
+
+def transient_faults(*, fail_modes=("pallas", "pallas_interpret"),
+                     max_faults: int | None = None, log=None):
+    """``fault_hook``: raise RESOURCE_EXHAUSTED for attempts in ``fail_modes``.
+
+    With the default filter every non-``reference`` attempt fails, so a run
+    entering the ladder above ``reference`` must walk the whole
+    retry -> halve -> downgrade sequence to finish.  ``max_faults`` bounds
+    the total injections (None = unbounded); ``log`` (a list) records every
+    ``(engine, lo, hi, mode, attempt)`` the hook saw, injected or not.
+    """
+    import jax
+
+    state = {"n": 0}
+
+    def hook(engine: str, lo: int, hi: int, mode: str, attempt: int) -> None:
+        if log is not None:
+            log.append((engine, lo, hi, mode, attempt))
+        if mode in fail_modes and (max_faults is None or state["n"] < max_faults):
+            state["n"] += 1
+            raise jax.errors.JaxRuntimeError(
+                f"RESOURCE_EXHAUSTED: injected fault #{state['n']} "
+                f"({engine} [{lo}:{hi}) {mode} attempt {attempt})")
+
+    return hook
+
+
+def corrupt_file(path, mode: str = "flip") -> None:
+    """Damage a checkpoint blob in place: ``"flip"`` one payload byte, or
+    ``"truncate"`` the file to half its length (mid-payload)."""
+    path = pathlib.Path(path)
+    data = bytearray(path.read_bytes())
+    if mode == "flip":
+        data[len(data) // 2] ^= 0xFF
+    elif mode == "truncate":
+        del data[len(data) // 2:]
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    path.write_bytes(bytes(data))

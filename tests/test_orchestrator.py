@@ -1,0 +1,341 @@
+"""Crash-safety of the streaming sweep orchestrator (repro.core.orchestrator).
+
+The contract under test, for all three batched engines:
+
+* **Kill-at-any-chunk-boundary + resume is bit-identical** to an
+  uninterrupted monolithic run — parametrized over every interior chunk
+  boundary of a 4-chunk run (and the boundary after the *final* chunk).
+* **Corrupt, truncated, foreign or layout-mismatched checkpoints are
+  refused** with a clear error (never silently regenerated over).
+* **The degradation ladder** fires in order — retry (with backoff), then
+  block-aligned halving, then a sticky backend downgrade — on transient
+  faults only, records every event in the run meta, and still produces
+  bit-identical results.  Non-transient errors raise immediately.
+* **Preemption** checkpoints and exits at the next chunk boundary
+  (:class:`Preempted`); the rerun resumes bit-identically.
+
+Faults come from tests/_faultinject.py via ``SweepRunConfig``'s two test
+seams (``fault_hook`` before each attempt, ``on_chunk_committed`` after each
+durable commit)."""
+import numpy as np
+import pytest
+from _faultinject import SimulatedKill, corrupt_file, kill_after, transient_faults
+
+from repro.checkpoint.checkpoint import CheckpointCorruptError
+from repro.core.orchestrator import (Preempted, SweepRunConfig,
+                                     run_sweep_system, run_sweep_timeline,
+                                     run_sweep_tlb)
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_system, sweep_tlb
+from repro.core.timeline import TimelineConfig, TimelineSpec, sweep_timeline
+from repro.core.tlbsim import SystemSimConfig
+from repro.runtime.fault_tolerance import PreemptionHandler
+
+LAT = SystemLatencies()
+BLOCK = 128
+
+
+def _cfg(tmp_path, **kw):
+    kw.setdefault("backoff_base_s", 0.0)
+    kw.setdefault("backoff_cap_s", 0.0)
+    kw.setdefault("preemption", PreemptionHandler(install=False))
+    return SweepRunConfig(checkpoint_dir=str(tmp_path), **kw)
+
+
+# ---------------------------------------------------------------------------
+# One harness per engine: run(cfg) -> (list of output arrays, meta); the
+# oracle is the monolithic engine on the same inputs.  Every case is sized to
+# exactly 4 macro-chunks so the kill points cover every interior boundary.
+# ---------------------------------------------------------------------------
+
+def _tlb_engine():
+    rng = np.random.default_rng(7)
+    addrs = rng.integers(0, 1 << 22, 4096).astype(np.int64)
+    specs = [TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=p)
+             for p in (1, 8)]
+
+    def run(cfg, kernel_mode="reference"):
+        res, meta = run_sweep_tlb(addrs, specs, kernel_mode=kernel_mode,
+                                  block=BLOCK, run=cfg, name="tlb")
+        return [res.hits], meta
+
+    oracle = [sweep_tlb(addrs, specs, kernel_mode="reference",
+                        block=BLOCK).hits]
+    return run, oracle, 4096, 1024, "tlb.ckpt"
+
+
+def _system_engine():
+    rng = np.random.default_rng(11)
+    lines = rng.integers(0, 1 << 26, 4096).astype(np.int64)
+    cfgs = [
+        SystemSimConfig(num_partitions=8),
+        SystemSimConfig(accel_tlb=TLBConfig(entries=16, ways=4),
+                        num_partitions=4),
+        SystemSimConfig(cache=None, page_shift=21, num_partitions=32),
+    ]
+
+    def run(cfg, kernel_mode="reference"):
+        bev, meta = run_sweep_system(lines, cfgs, kernel_mode=kernel_mode,
+                                     block=BLOCK, run=cfg, name="system")
+        return [bev.cache_hit, bev.accel_tlb_hit, bev.mem_tlb_hit], meta
+
+    o = sweep_system(lines, cfgs, kernel_mode="reference", block=BLOCK)
+    oracle = [o.cache_hit, o.accel_tlb_hit, o.mem_tlb_hit]
+    return run, oracle, 4096, 1024, "system.ckpt"
+
+
+def _timeline_engine():
+    rng = np.random.default_rng(3)
+    lines_a = rng.integers(0, 1 << 24, 2048).astype(np.int64)
+    lines_b = rng.integers(0, 1 << 24, 1200).astype(np.int64)
+    ev_a = sweep_system(lines_a, [SystemSimConfig(num_partitions=8)])[0]
+    ev_b = sweep_system(lines_b, [SystemSimConfig(num_partitions=2)])[0]
+    specs = [
+        TimelineSpec(lines_a, ev_a, "sparta",
+                     cfg=TimelineConfig(mshrs=4, tlb_ports=1, dram_banks=8),
+                     num_partitions=8, num_accelerators=2),
+        TimelineSpec(lines_b, ev_b, "ideal",
+                     cfg=TimelineConfig(mshrs=2, tlb_ports=1, dram_banks=4),
+                     num_accelerators=4),
+    ]
+
+    def run(cfg, kernel_mode="reference"):
+        res, meta = run_sweep_timeline(specs, LAT, kernel_mode=kernel_mode,
+                                       block=BLOCK, run=cfg, name="timeline")
+        return [a for r in res for a in (r.latency, r.overhead, r.done)], meta
+
+    oracle = [a for r in sweep_timeline(specs, LAT, kernel_mode="reference",
+                                        block=BLOCK)
+              for a in (r.latency, r.overhead, r.done)]
+    return run, oracle, 2048, 512, "timeline.ckpt"
+
+
+_BUILDERS = {"tlb": _tlb_engine, "system": _system_engine,
+             "timeline": _timeline_engine}
+_CASES = {}
+
+
+def _engine(name):
+    if name not in _CASES:   # trace + oracle built once per engine
+        _CASES[name] = _BUILDERS[name]()
+    return _CASES[name]
+
+
+def _assert_bits(got, want, ctx=""):
+    assert len(got) == len(want)
+    for i, (a, b) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{ctx} output {i}")
+
+
+# ---------------------------------------------------------------------------
+# Kill-at-every-chunk-boundary + resume == uninterrupted run.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["tlb", "system", "timeline"])
+@pytest.mark.parametrize("kill", [1, 2, 3])
+def test_kill_and_resume_bit_identical(tmp_path, engine, kill):
+    run, oracle, total, chunk, blob = _engine(engine)
+    with pytest.raises(SimulatedKill):
+        run(_cfg(tmp_path, chunk_accesses=chunk,
+                 on_chunk_committed=kill_after(kill)))
+    assert (tmp_path / blob).exists()  # the commit the kill tore us from
+
+    outs, meta = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+    assert meta["resumed_from"] == kill * chunk
+    assert meta["chunks_committed"] == 4  # killed run's commits carry over
+    _assert_bits(outs, oracle, ctx=f"{engine} kill@{kill}")
+
+
+@pytest.mark.parametrize("engine", ["tlb", "system", "timeline"])
+def test_kill_after_final_chunk_then_resume(tmp_path, engine):
+    """Death between the last chunk commit and the completed-marker write:
+    resume re-enters at now == total, runs zero chunks, and finalises."""
+    run, oracle, total, chunk, _ = _engine(engine)
+    with pytest.raises(SimulatedKill):
+        run(_cfg(tmp_path, chunk_accesses=chunk,
+                 on_chunk_committed=kill_after(4)))
+    outs, meta = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+    assert meta["resumed_from"] == total
+    _assert_bits(outs, oracle, ctx=f"{engine} kill@final")
+
+
+def test_clean_run_leaves_no_blob_and_matches_oracle(tmp_path):
+    run, oracle, _, chunk, blob = _engine("tlb")
+    outs, meta = run(_cfg(tmp_path, chunk_accesses=chunk))
+    _assert_bits(outs, oracle)
+    assert meta["chunks_committed"] == 4 and meta["resumable"]
+    assert not (tmp_path / blob).exists()   # fresh clean run cleans up
+
+    outs2, _ = run(_cfg(tmp_path, chunk_accesses=chunk, keep_checkpoint=True))
+    _assert_bits(outs2, oracle)
+    assert (tmp_path / blob).exists()       # unless asked to keep the blob
+
+
+def test_completed_checkpoint_short_circuits_rerun(tmp_path):
+    run, oracle, total, chunk, _ = _engine("system")
+    with pytest.raises(SimulatedKill):
+        run(_cfg(tmp_path, chunk_accesses=chunk,
+                 on_chunk_committed=kill_after(2)))
+    outs1, meta1 = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+    assert meta1["resumed_from"] == 2 * chunk
+    # A --resume run keeps its completed blob; rerunning is a pure read.
+    outs2, meta2 = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+    assert meta2["completed_from_checkpoint"]
+    assert meta2["resumed_from"] == total
+    _assert_bits(outs1, oracle)
+    _assert_bits(outs2, oracle)
+
+
+# ---------------------------------------------------------------------------
+# Refusal: corrupt / truncated / foreign / mismatched checkpoints.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("damage", ["flip", "truncate"])
+def test_corrupt_checkpoint_refused(tmp_path, damage):
+    run, _, _, chunk, blob = _engine("tlb")
+    with pytest.raises(SimulatedKill):
+        run(_cfg(tmp_path, chunk_accesses=chunk,
+                 on_chunk_committed=kill_after(1)))
+    corrupt_file(tmp_path / blob, mode=damage)
+    with pytest.raises(CheckpointCorruptError, match="refusing to resume"):
+        run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+
+
+def test_fingerprint_mismatch_refused(tmp_path):
+    """A valid blob taken on a *different trace* must not resume this one."""
+    rng = np.random.default_rng(0)
+    specs = [TLBSweepSpec(TLBConfig(entries=64, ways=4))]
+    a = rng.integers(0, 1 << 20, 2048).astype(np.int64)
+    with pytest.raises(SimulatedKill):
+        run_sweep_tlb(a, specs, kernel_mode="reference", block=BLOCK,
+                      name="fp",
+                      run=_cfg(tmp_path, chunk_accesses=512,
+                               on_chunk_committed=kill_after(1)))
+    with pytest.raises(CheckpointCorruptError, match="fingerprint mismatch"):
+        run_sweep_tlb(a + 1, specs, kernel_mode="reference", block=BLOCK,
+                      name="fp",
+                      run=_cfg(tmp_path, chunk_accesses=512, resume=True))
+
+
+def test_wrong_engine_checkpoint_refused(tmp_path):
+    """A blob written by one engine is refused by another under the same
+    name (engine tag checked before anything is imported)."""
+    run, _, _, chunk, blob = _engine("tlb")
+    with pytest.raises(SimulatedKill):
+        run(_cfg(tmp_path, chunk_accesses=chunk,
+                 on_chunk_committed=kill_after(1)))
+    lines = np.arange(1024, dtype=np.int64) * 64
+    with pytest.raises(CheckpointCorruptError, match="was written by"):
+        run_sweep_system(lines, [SystemSimConfig()], kernel_mode="reference",
+                         block=BLOCK, name="tlb",   # collides with tlb.ckpt
+                         run=_cfg(tmp_path, resume=True))
+
+
+# ---------------------------------------------------------------------------
+# The degradation ladder.
+# ---------------------------------------------------------------------------
+
+def test_ladder_retry_halve_downgrade_order_and_bit_identity(tmp_path):
+    """Every non-reference attempt faults with RESOURCE_EXHAUSTED: the run
+    must retry, then halve (block-aligned), then downgrade — in that order —
+    finish on 'reference', log every step, and still match the oracle."""
+    run, oracle, _, chunk, _ = _engine("tlb")
+    seen = []
+    outs, meta = run(
+        _cfg(tmp_path, chunk_accesses=chunk, max_retries=1,
+             fault_hook=transient_faults(log=seen)),
+        kernel_mode="pallas_interpret")
+    _assert_bits(outs, oracle, ctx="ladder")
+    assert meta["start_mode"] == "pallas_interpret"
+    assert meta["final_mode"] == "reference"          # sticky downgrade
+    names = [e["event"] for e in meta["events"]]
+    # Order within the first macro-chunk: retries exhaust, the span halves,
+    # retries exhaust on the first half, the backend downgrades.
+    assert names[:5] == ["retry", "retry", "halve", "retry", "retry"]
+    assert "downgrade" in names
+    down = meta["events"][names.index("downgrade")]
+    assert down["to_mode"] == "reference"
+    assert "RESOURCE_EXHAUSTED" in down["error"]
+    h = next(e for e in meta["events"] if e["event"] == "halve")
+    assert (h["mid"] - h["lo"]) % BLOCK == 0          # block-aligned split
+    # After the downgrade no attempt ran a failing mode again.
+    first_ref = next(i for i, s in enumerate(seen) if s[3] == "reference")
+    assert all(s[3] == "reference" for s in seen[first_ref:])
+
+
+def test_ladder_events_survive_resume(tmp_path):
+    """Downgrades are sticky across a kill: the resumed run re-enters at the
+    checkpointed rung and its meta still carries the pre-kill events."""
+    run, oracle, _, chunk, _ = _engine("tlb")
+    kill = kill_after(2)
+
+    def fault_then_kill(i):
+        kill(i)
+
+    with pytest.raises(SimulatedKill):
+        run(_cfg(tmp_path, chunk_accesses=chunk, max_retries=0,
+                 fault_hook=transient_faults(),
+                 on_chunk_committed=fault_then_kill),
+            kernel_mode="pallas_interpret")
+    outs, meta = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True),
+                     kernel_mode="pallas_interpret")
+    _assert_bits(outs, oracle, ctx="resume-after-downgrade")
+    assert meta["final_mode"] == "reference"
+    assert any(e["event"] == "downgrade" for e in meta["events"])
+    # Halving had shrunk the spans to single blocks before the downgrade, so
+    # the two pre-kill commits cover exactly two kernel blocks.
+    assert meta["resumed_from"] == 2 * BLOCK
+
+
+def test_non_transient_error_raises_immediately(tmp_path):
+    run, _, _, chunk, blob = _engine("tlb")
+    seen = []
+
+    def hook(engine, lo, hi, mode, attempt):
+        seen.append(attempt)
+        raise ValueError("config bug — not a runtime fault")
+
+    with pytest.raises(ValueError, match="config bug"):
+        run(_cfg(tmp_path, chunk_accesses=chunk, fault_hook=hook))
+    assert seen == [0]                     # no retry, no ladder
+    assert not (tmp_path / blob).exists()  # nothing was committed
+
+
+# ---------------------------------------------------------------------------
+# Preemption and the stackdist monolithic path.
+# ---------------------------------------------------------------------------
+
+def test_preemption_checkpoints_at_chunk_boundary_then_resumes(tmp_path):
+    run, oracle, _, chunk, blob = _engine("tlb")
+    handler = PreemptionHandler(install=False)
+
+    def sigterm_mid_run(i):
+        if i >= 1:           # "signal" lands during chunk 2
+            handler.requested = True
+
+    with pytest.raises(Preempted) as exc:
+        run(_cfg(tmp_path, chunk_accesses=chunk, preemption=handler,
+                 on_chunk_committed=sigterm_mid_run))
+    assert exc.value.now == 2 * chunk
+    assert "--resume" in str(exc.value)
+    assert (tmp_path / blob).exists()
+    outs, meta = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+    assert meta["resumed_from"] == 2 * chunk
+    _assert_bits(outs, oracle, ctx="preempted")
+
+
+def test_stackdist_path_is_monolithic_and_not_resumable(tmp_path):
+    """'auto' on a pure-LRU TLB sweep resolves to the sort-based stackdist
+    engine, which needs the whole trace: it runs monolithically, writes no
+    checkpoint, and says so in its meta."""
+    rng = np.random.default_rng(5)
+    addrs = rng.integers(0, 1 << 20, 2048).astype(np.int64)
+    specs = [TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=p)
+             for p in (1, 4)]
+    res, meta = run_sweep_tlb(addrs, specs, kernel_mode="auto", block=BLOCK,
+                              name="sd", run=_cfg(tmp_path, chunk_accesses=512))
+    assert meta["resumable"] is False
+    assert meta["start_mode"] == "stackdist"
+    assert not list(tmp_path.glob("*.ckpt"))
+    ref = sweep_tlb(addrs, specs, kernel_mode="reference", block=BLOCK)
+    np.testing.assert_array_equal(res.hits, ref.hits)
