@@ -180,7 +180,8 @@ class _ChunkRunner:
 
     # -- checkpointing ------------------------------------------------------
 
-    def _meta(self, completed: bool) -> dict:
+    def _meta(self, completed: bool, *,
+              chunks_committed: Optional[int] = None) -> dict:
         return {
             "format": CKPT_FORMAT,
             "engine": self.stream.engine,
@@ -191,10 +192,12 @@ class _ChunkRunner:
             "completed": completed,
             "mode": self.ladder[self.rung],
             "events": self.events,
-            "chunks_committed": self.chunks_committed,
+            "chunks_committed": (self.chunks_committed if chunks_committed
+                                 is None else chunks_committed),
         }
 
-    def _write_checkpoint(self, completed: bool) -> None:
+    def _write_checkpoint(self, completed: bool, *,
+                          chunks_committed: Optional[int] = None) -> None:
         if self.path is None:
             return
         self.path.parent.mkdir(parents=True, exist_ok=True)
@@ -202,7 +205,9 @@ class _ChunkRunner:
         now = int(self.stream.now)
         for nm, buf in zip(self.out_names, self.bufs):
             arrays[f"r_{nm}"] = buf[:, :now]
-        write_checkpoint_blob(self.path, arrays, self._meta(completed))
+        write_checkpoint_blob(
+            self.path, arrays,
+            self._meta(completed, chunks_committed=chunks_committed))
 
     def try_resume(self) -> Optional[dict]:
         """Load the checkpoint if resuming.  Returns the blob meta when the
@@ -243,8 +248,12 @@ class _ChunkRunner:
     def _commit(self, lo: int, hi: int, outs) -> None:
         for buf, out in zip(self.bufs, outs):
             buf[:, lo:hi] = out
+        # The blob (written with the incremented count) is the commit point:
+        # the in-memory counter moves only once the write has succeeded, so
+        # meta/events never claim one more durable chunk than disk holds.
+        self._write_checkpoint(completed=False,
+                               chunks_committed=self.chunks_committed + 1)
         self.chunks_committed += 1
-        self._write_checkpoint(completed=False)
         if self.cfg.on_chunk_committed is not None:
             self.cfg.on_chunk_committed(self.chunks_committed - 1)
         pre = self.cfg.preemption
@@ -263,12 +272,17 @@ class _ChunkRunner:
         last_exc: Optional[Exception] = None
         for attempt in range(self.cfg.max_retries + 1):
             mode = self.ladder[self.rung]
+            # Only the chunk attempt itself may be retried.  _commit stays
+            # OUTSIDE the try: once run_chunk has returned, the stream has
+            # already advanced past `lo`, so re-entering this loop after a
+            # checkpoint-write failure would re-apply the chunk to the
+            # advanced state (double-applied hits, drifted `now`) and then
+            # checkpoint the corrupted prefix as good.  A failed commit must
+            # propagate, leaving the previous blob as the resume point.
             try:
                 if self.cfg.fault_hook is not None:
                     self.cfg.fault_hook(self.stream.engine, lo, hi, mode, attempt)
                 outs = self.run_chunk(lo, hi, mode)
-                self._commit(lo, hi, outs)
-                return
             except Exception as exc:
                 if not is_transient(exc):
                     raise
@@ -277,6 +291,9 @@ class _ChunkRunner:
                           error=f"{type(exc).__name__}: {exc}")
                 if attempt < self.cfg.max_retries:
                     time.sleep(delays[attempt])
+                continue
+            self._commit(lo, hi, outs)
+            return
         # Retries exhausted.  Halve if the span spans more than one block,
         # else (or eventually) take the next rung down the ladder.
         block = self.stream.block
@@ -305,16 +322,20 @@ class _ChunkRunner:
         while self.stream.now < self.total:
             lo = int(self.stream.now)
             self._exec(lo, min(lo + chunk, self.total))
-        self._write_checkpoint(completed=True)
         if self.path is not None and not self.cfg.keep_checkpoint \
                 and not self.cfg.resume:
             # A fresh (non-resume) run that finished cleanly leaves no blob
-            # behind unless asked to; a --resume run keeps its completed blob
-            # so an identical rerun is a no-op.
+            # behind unless asked to — the completed blob would be deleted
+            # straight away, so don't serialize the full result prefix only
+            # to unlink it; just drop the last chunk blob.
             try:
                 os.remove(self.path)
             except OSError:
                 pass
+        else:
+            # keep_checkpoint or --resume: the completed blob stays so an
+            # identical rerun is a pure checkpoint read.
+            self._write_checkpoint(completed=True)
         return self.meta()
 
     def meta(self, *, completed_from_checkpoint: bool = False) -> dict:

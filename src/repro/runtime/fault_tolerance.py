@@ -9,6 +9,7 @@ reassigned without replaying any loader state.
 from __future__ import annotations
 
 import dataclasses
+import errno
 import random
 import signal
 import time
@@ -105,15 +106,31 @@ _TRANSIENT_STATUS = ("RESOURCE_EXHAUSTED", "DEADLINE_EXCEEDED", "UNAVAILABLE",
                      "ABORTED", "CANCELLED", "INTERNAL", "UNKNOWN",
                      "out of memory", "OOM")
 
+# OSError is mostly deterministic (missing file, bad permissions, dir-vs-file,
+# full disk): retrying those just replays the failure — and, worse, walks a
+# retry ladder for errors that will never clear.  Only the classic
+# "try again" errnos are worth a retry.
+_TRANSIENT_ERRNOS = frozenset(
+    getattr(errno, nm) for nm in (
+        "EINTR", "EAGAIN", "EWOULDBLOCK", "EBUSY", "EIO", "ETIMEDOUT",
+        "ESTALE", "ENOBUFS", "ECONNRESET", "ECONNABORTED", "ENETRESET",
+        "ENETDOWN", "ENETUNREACH", "EHOSTUNREACH",
+    ) if hasattr(errno, nm))
+
 
 def is_transient(exc: BaseException) -> bool:
     """Is this exception a transient runtime fault worth retrying?
 
     Policy: deterministic program bugs (ValueError, TypeError, KeyError,
     AssertionError, ...) are never transient.  XLA runtime errors are
-    transient only for the retryable status codes above.  Plain RuntimeError
-    and OS-level I/O hiccups (OSError family, MemoryError, TimeoutError)
-    are treated as transient.
+    transient only for the retryable status codes above — this applies to
+    any RuntimeError carrying one of those markers, so old jax without
+    ``jax.errors.JaxRuntimeError`` still classifies; a RuntimeError without
+    one is a program bug and surfaces immediately.  OS-level errors are
+    transient only for MemoryError/TimeoutError/ConnectionError and the
+    "try again" errnos in :data:`_TRANSIENT_ERRNOS`; deterministic
+    filesystem failures (FileNotFoundError, PermissionError, ENOSPC, ...)
+    are not retried.
     """
     try:
         from jax.errors import JaxRuntimeError
@@ -122,13 +139,15 @@ def is_transient(exc: BaseException) -> bool:
     if JaxRuntimeError and isinstance(exc, JaxRuntimeError):
         msg = str(exc)
         return any(code in msg for code in _TRANSIENT_STATUS)
-    if isinstance(exc, (MemoryError, TimeoutError, ConnectionError, OSError)):
+    if isinstance(exc, (MemoryError, TimeoutError, ConnectionError)):
         return True
-    # RuntimeError (minus the XLA subclass handled above and the
-    # deterministic stdlib subclasses) is the conventional "environment
-    # misbehaved" type; everything else is a program bug.
-    return isinstance(exc, RuntimeError) and not isinstance(
-        exc, (NotImplementedError, RecursionError))
+    if isinstance(exc, OSError):
+        return exc.errno in _TRANSIENT_ERRNOS
+    if isinstance(exc, RuntimeError) and not isinstance(
+            exc, (NotImplementedError, RecursionError)):
+        msg = str(exc)
+        return any(code in msg for code in _TRANSIENT_STATUS)
+    return False
 
 
 def backoff_delays(retries: int, *, base_s: float = 0.05, cap_s: float = 2.0,

@@ -287,6 +287,47 @@ def test_ladder_events_survive_resume(tmp_path):
     assert meta["resumed_from"] == 2 * BLOCK
 
 
+def test_checkpoint_write_failure_propagates_without_double_apply(
+        tmp_path, monkeypatch):
+    """The high-stakes seam: run_chunk succeeds (stream state has advanced),
+    then the checkpoint write fails with an OSError whose errno *is* in the
+    transient whitelist.  The failure must propagate — NOT be retried as if
+    the chunk itself had failed, which would re-apply the chunk to the
+    already-advanced state and then checkpoint the corrupted prefix — and
+    the previous blob must remain the durable resume point."""
+    import errno
+
+    import repro.core.orchestrator as orch
+
+    run, oracle, _, chunk, blob = _engine("tlb")
+    real_write = orch.write_checkpoint_blob
+    writes = {"n": 0}
+
+    def flaky_write(path, arrays, meta):
+        writes["n"] += 1
+        if writes["n"] == 3:            # fail the 3rd chunk's commit
+            raise OSError(errno.EIO, "injected EIO on checkpoint write")
+        return real_write(path, arrays, meta)
+
+    attempts = []
+    monkeypatch.setattr(orch, "write_checkpoint_blob", flaky_write)
+    with pytest.raises(OSError, match="injected EIO"):
+        run(_cfg(tmp_path, chunk_accesses=chunk,
+                 fault_hook=lambda eng, lo, hi, mode, att:
+                     attempts.append((lo, att))))
+    # Every chunk was attempted exactly once — the write failure was never
+    # fed back into the retry/halve/downgrade ladder.
+    assert [a for _, a in attempts] == [0, 0, 0]
+    assert len({lo for lo, _ in attempts}) == 3
+    assert (tmp_path / blob).exists()   # chunk 2's blob survived untouched
+
+    monkeypatch.setattr(orch, "write_checkpoint_blob", real_write)
+    outs, meta = run(_cfg(tmp_path, chunk_accesses=chunk, resume=True))
+    assert meta["resumed_from"] == 2 * chunk   # chunk 3's commit never landed
+    assert meta["chunks_committed"] == 4       # 2 durable + 2 resumed
+    _assert_bits(outs, oracle, ctx="resume-after-ckpt-write-failure")
+
+
 def test_non_transient_error_raises_immediately(tmp_path):
     run, _, _, chunk, blob = _engine("tlb")
     seen = []

@@ -97,12 +97,39 @@ def test_retry_step_recovers():
     def flaky(x):
         calls["n"] += 1
         if calls["n"] < 3:
-            raise RuntimeError("transient")
+            raise RuntimeError("UNAVAILABLE: transient backend hiccup")
         return x + 1
 
-    assert retry_step(flaky, 41, retries=3) == 42
+    assert retry_step(flaky, 41, retries=3, base_delay_s=0) == 42
     with pytest.raises(RuntimeError):
-        retry_step(lambda: (_ for _ in ()).throw(RuntimeError("always")), retries=1)
+        retry_step(lambda: (_ for _ in ()).throw(
+            RuntimeError("UNAVAILABLE: always")), retries=1, base_delay_s=0)
+
+
+def test_is_transient_classification():
+    import errno
+
+    from repro.runtime.fault_tolerance import is_transient
+
+    # Retryable environment hiccups.
+    assert is_transient(MemoryError())
+    assert is_transient(TimeoutError())
+    assert is_transient(ConnectionResetError(errno.ECONNRESET, "reset"))
+    assert is_transient(InterruptedError(errno.EINTR, "interrupted"))
+    assert is_transient(OSError(errno.EIO, "flaky disk"))
+    # XLA-status-coded runtime faults classify even as bare RuntimeError
+    # (old jax without jax.errors.JaxRuntimeError).
+    assert is_transient(RuntimeError("RESOURCE_EXHAUSTED: out of memory"))
+    # Deterministic filesystem failures surface immediately: retrying a
+    # missing file / bad permission / full disk just replays the failure.
+    assert not is_transient(FileNotFoundError(errno.ENOENT, "gone"))
+    assert not is_transient(PermissionError(errno.EACCES, "denied"))
+    assert not is_transient(IsADirectoryError(errno.EISDIR, "a dir"))
+    assert not is_transient(OSError(errno.ENOSPC, "disk full"))
+    # Program bugs are never transient.
+    assert not is_transient(ValueError("bad config"))
+    assert not is_transient(RuntimeError("refusing to overwrite history"))
+    assert not is_transient(NotImplementedError())
 
 
 def test_training_loop_checkpoints_and_preempts(tmp_path):
