@@ -1,6 +1,8 @@
-"""Shared benchmark plumbing: trace cache, CSV output, claim checks."""
+"""Shared benchmark plumbing: trace cache, CSV output, claim checks, and the
+per-run telemetry scope (JSONL run logs + the ``_telemetry`` figure stamp)."""
 from __future__ import annotations
 
+import functools
 import json
 import pathlib
 import time
@@ -9,9 +11,11 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core import traces
+from repro.runtime import telemetry
 
 CACHE = pathlib.Path(__file__).resolve().parent / "_cache"
 FIGS = CACHE / "figs"
+RUNLOGS = CACHE / "runlogs"
 GIB = 1 << 30
 
 _TRACE_CACHE: Dict = {}
@@ -81,6 +85,39 @@ def crash_safety(metas: Dict[str, dict]) -> dict:
     }
 
 
+def with_runlog(fig: str):
+    """Decorator bracketing a figure/bench driver's ``run()`` in a telemetry
+    run scope: every orchestrated engine call, chunk span, ladder event and
+    measured row of the run lands in ``_cache/runlogs/<fig>.jsonl`` (one
+    file per driver, overwritten per run — the stable paths CI uploads and
+    ``benchmarks/obs_report.py`` renders)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            from repro.core import benchtime
+
+            with telemetry.run_scope(RUNLOGS / f"{fig}.jsonl", run=fig,
+                                     device=benchtime.device_metadata()):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
+def telemetry_stamp(metas: Dict[str, dict] = None) -> dict:
+    """Figure-JSON ``_telemetry`` stamp: the tracer's run summary (total
+    spans, event counts, counters/gauges) plus, per orchestrated engine
+    call, the achieved accesses/s of every backend that actually executed.
+    ``_crash_safety`` says *what degraded*; this says *what it cost*."""
+    stamp = telemetry.get_tracer().summary()
+    if metas:
+        stamp["engines"] = {
+            name: {"engine": m.get("engine"),
+                   "final_mode": m.get("final_mode"),
+                   "throughput": m.get("throughput", {})}
+            for name, m in metas.items()}
+    return stamp
+
+
 def save_fig(name: str, payload: dict):
     from repro.core import benchtime
 
@@ -90,6 +127,11 @@ def save_fig(name: str, payload: dict):
     # Same schema stamp as BENCH_sweep.json rows: figure outputs say what
     # device they were produced on (interpret-mode CPU vs real TPU).
     payload["_device"] = benchtime.device_metadata()
+    # Drivers with orchestrated engine calls pass an explicit stamp (with
+    # per-engine throughput); anything else written inside a telemetry run
+    # gets the plain run summary.
+    if "_telemetry" not in payload and telemetry.get_tracer().active:
+        payload["_telemetry"] = telemetry_stamp()
     (FIGS / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
 
 

@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
-                               save_fig, trace)
+                               save_fig, telemetry_stamp, trace, with_runlog)
 from repro.core import cpi
 from repro.core.orchestrator import run_sweep_system
 from repro.core.sparta import SystemLatencies, TLBConfig
@@ -34,6 +34,7 @@ CONFIGS = (  # (label, partitions, page_shift, design)
 )
 
 
+@with_runlog("fig10")
 def run(quick: bool = False, kernel_mode: str = "auto",
         resume: bool = False, chunk_accesses=None):
     n_ops = 8_000 if quick else 25_000
@@ -105,5 +106,6 @@ def run(quick: bool = False, kernel_mode: str = "auto",
                        "mean": mean,
                        "overhead_reduction": list(map(float, overhead_reduction)),
                        "claims": [x.row() for x in (c6a, c6b, c6c, c6d, c6e, c6f, c8)],
-                       "_crash_safety": crash_safety(metas)})
+                       "_crash_safety": crash_safety(metas),
+                       "_telemetry": telemetry_stamp(metas)})
     return [c6a, c6b, c6c, c6d, c6e, c6f, c8]

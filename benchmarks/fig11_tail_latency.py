@@ -30,7 +30,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
-                               save_fig)
+                               save_fig, telemetry_stamp, with_runlog)
 from repro.core import timeline, traces
 from repro.core.orchestrator import run_sweep_system, run_sweep_timeline
 from repro.core.sparta import SystemLatencies, TLBConfig
@@ -43,6 +43,7 @@ PARTITIONS = 32
 QUEUES = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
 
 
+@with_runlog("fig11")
 def run(quick: bool = False, kernel_mode: str = "auto",
         resume: bool = False, chunk_accesses=None):
     accels = (1, 4, 16) if quick else (1, 2, 4, 8, 16)
@@ -117,6 +118,7 @@ def run(quick: bool = False, kernel_mode: str = "auto",
         "rows": rows,
         "claims": [c9a.row(), c9b.row()],
         "_crash_safety": crash_safety(metas),
+        "_telemetry": telemetry_stamp(metas),
     })
     return [c9a, c9b]
 
@@ -128,7 +130,9 @@ def main(argv=None) -> int:
     import sys
 
     from repro.core.orchestrator import Preempted
+    from repro.runtime import telemetry
 
+    telemetry.setup_logging()
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--kernel-mode", default="auto")

@@ -19,10 +19,12 @@ partitioning makes it vanish; (16 partitions, 16 threads) beats
 (1 partition, 1 thread) at equal aggregate entries/thread."""
 from __future__ import annotations
 
+import logging
+
 import numpy as np
 
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
-                               save_fig)
+                               save_fig, telemetry_stamp, with_runlog)
 from repro.core import timeline, traces
 from repro.core.orchestrator import (run_sweep_system, run_sweep_timeline,
                                      run_sweep_tlb)
@@ -36,7 +38,10 @@ TLB = TLBConfig(entries=128, ways=4)
 CACHE = TLBConfig(entries=256, ways=4)  # virtual cache for the timeline half
 QUEUES = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
 
+_LOG = logging.getLogger("repro.bench.fig5")
 
+
+@with_runlog("fig5")
 def run(quick: bool = False, kernel_mode: str = "auto",
         resume: bool = False, chunk_accesses=None):
     n_ops = 4_000 if quick else 12_000
@@ -84,9 +89,9 @@ def run(quick: bool = False, kernel_mode: str = "auto",
     tl_mode = kernel_mode
     if kernel_mode == "stackdist":
         tl_mode = "auto"
-        print(f"  (fig5 timeline half: kernel_mode={kernel_mode!r} is "
-              f"sweep_tlb-only; running the system sweep + timeline half "
-              f"with 'auto')")
+        _LOG.warning(
+            "fig5 timeline half: kernel_mode=%r is sweep_tlb-only; running "
+            "the system sweep + timeline half with 'auto'", kernel_mode)
     lat = SystemLatencies(n_sockets=8)
     tl_specs = []
     for w in W4:
@@ -117,5 +122,6 @@ def run(quick: bool = False, kernel_mode: str = "auto",
     save_fig("fig5", {"threads": THREADS, "parts": PARTS, "results": results,
                       "timeline_p99": tl_p99, "timeline_cap": tl_cap,
                       "claims": [c3a.row(), c3b.row()],
-                      "_crash_safety": crash_safety(metas)})
+                      "_crash_safety": crash_safety(metas),
+                      "_telemetry": telemetry_stamp(metas)})
     return [c3a, c3b]

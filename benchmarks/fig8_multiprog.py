@@ -9,7 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (Claim, GIB, crash_safety, print_csv,
-                               run_config, save_fig)
+                               run_config, save_fig, telemetry_stamp,
+                               with_runlog)
 from repro.core import traces
 from repro.core.orchestrator import run_sweep_tlb
 from repro.core.sparta import TLBConfig
@@ -37,6 +38,7 @@ def _mix(n_ops, seed, spec):
     return inter, who, names
 
 
+@with_runlog("fig8")
 def run(quick: bool = False, kernel_mode: str = "auto",
         resume: bool = False, chunk_accesses=None):
     n_ops = 4_000 if quick else 10_000
@@ -89,5 +91,6 @@ def run(quick: bool = False, kernel_mode: str = "auto",
     print(c3c); print(c3d)
     save_fig("fig8", {"parts": PARTS, "results": results,
                       "claims": [c3c.row(), c3d.row()],
-                      "_crash_safety": crash_safety(metas)})
+                      "_crash_safety": crash_safety(metas),
+                      "_telemetry": telemetry_stamp(metas)})
     return [c3c, c3d]

@@ -12,7 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
-                               save_fig, trace)
+                               save_fig, telemetry_stamp, trace, with_runlog)
 from repro.core import cpi
 from repro.core.orchestrator import run_sweep_system
 from repro.core.sparta import SystemLatencies, TLBConfig
@@ -24,6 +24,7 @@ MEM_TLB = TLBConfig(entries=128, ways=4)
 CACHE = TLBConfig(entries=256, ways=4)  # 16KB / 64B lines
 
 
+@with_runlog("fig9")
 def run(quick: bool = False, kernel_mode: str = "auto",
         resume: bool = False, chunk_accesses=None):
     n_ops = 8_000 if quick else 25_000
@@ -73,5 +74,6 @@ def run(quick: bool = False, kernel_mode: str = "auto",
     print(c7a); print(c7b)
     save_fig("fig9", {"entries": ENTRIES, "results": results,
                       "claims": [c7a.row(), c7b.row()],
-                      "_crash_safety": crash_safety(metas)})
+                      "_crash_safety": crash_safety(metas),
+                      "_telemetry": telemetry_stamp(metas)})
     return [c7a, c7b]

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_csv, save_fig
+from benchmarks.common import print_csv, save_fig, with_runlog
 from repro.core import benchtime
 from repro.core.benchtime import measure
 
@@ -39,11 +39,33 @@ BENCH_SWEEP_PATH = pathlib.Path(__file__).resolve().parent.parent / "BENCH_sweep
 ENGINE_REPS = 2
 
 
-def _timeit(fn, *args, reps=5):
-    return measure(fn, *args, reps=reps).best_us
+def _timeit(fn, *args, reps=5, label=None):
+    return measure(fn, *args, reps=reps, label=label).best_us
 
 
-def run(quick: bool = False):
+@with_runlog("kernels")
+def run(quick: bool = False, profile_dir=None):
+    """One telemetry run (``_cache/runlogs/kernels.jsonl``): every measured
+    row lands as a ``measure`` span.  ``profile_dir`` additionally captures a
+    ``jax.profiler`` trace with one ``StepTraceAnnotation`` per engine bench
+    (don't pass it when already inside ``benchmarks/run.py --profile`` —
+    nested profiler traces error)."""
+    import contextlib
+
+    cm = (jax.profiler.trace(str(profile_dir)) if profile_dir
+          else contextlib.nullcontext())
+    with cm:
+        return _run_benches(quick, profile=bool(profile_dir))
+
+
+def _step(name: str, profile: bool):
+    import contextlib
+
+    return (jax.profiler.StepTraceAnnotation(name) if profile
+            else contextlib.nullcontext())
+
+
+def _run_benches(quick: bool, profile: bool = False):
     rng = np.random.default_rng(0)
     rows = []
 
@@ -56,7 +78,8 @@ def run(quick: bool = False):
     ref = flash_attention(q, k, v, kernel_mode="reference")
     pal = flash_attention(q, k, v, block_q=64, block_k=64, kernel_mode="pallas_interpret")
     err = float(jnp.abs(ref - pal).max())
-    us = _timeit(lambda a, b, c: flash_attention(a, b, c, kernel_mode="reference"), q, k, v)
+    us = _timeit(lambda a, b, c: flash_attention(a, b, c, kernel_mode="reference"), q, k, v,
+                 label="kernel:flash_attention")
     rows.append(["flash_attention", us, err])
 
     # paged attention
@@ -70,7 +93,8 @@ def run(quick: bool = False):
     ref = paged_attention(q1, kp, vp, tbl, ctx, kernel_mode="reference")
     pal = paged_attention(q1, kp, vp, tbl, ctx, kernel_mode="pallas_interpret")
     err = float(jnp.abs(ref - pal).max())
-    us = _timeit(lambda *a: paged_attention(*a, kernel_mode="reference"), q1, kp, vp, tbl, ctx)
+    us = _timeit(lambda *a: paged_attention(*a, kernel_mode="reference"), q1, kp, vp, tbl, ctx,
+                 label="kernel:paged_attention")
     rows.append(["paged_attention", us, err])
 
     # rwkv6 scan
@@ -84,7 +108,8 @@ def run(quick: bool = False):
     oref, sref = rwkv6_scan(r, kk, vv, w, u, kernel_mode="reference")
     opal, spal = rwkv6_scan(r, kk, vv, w, u, chunk=32, kernel_mode="pallas_interpret")
     err = float(jnp.abs(oref - opal).max())
-    us = _timeit(lambda *a: rwkv6_scan(*a, kernel_mode="reference")[0], r, kk, vv, w, u)
+    us = _timeit(lambda *a: rwkv6_scan(*a, kernel_mode="reference")[0], r, kk, vv, w, u,
+                 label="kernel:rwkv6_scan")
     rows.append(["rwkv6_scan", us, err])
 
     # mamba2 scan
@@ -99,7 +124,8 @@ def run(quick: bool = False):
     yref, _ = mamba2_scan(x, dt, A, Bm, C, Dp, kernel_mode="reference")
     ypal, _ = mamba2_scan(x, dt, A, Bm, C, Dp, chunk=32, kernel_mode="pallas_interpret")
     err = float(jnp.abs(yref - ypal).max())
-    us = _timeit(lambda *a: mamba2_scan(*a, kernel_mode="reference")[0], x, dt, A, Bm, C, Dp)
+    us = _timeit(lambda *a: mamba2_scan(*a, kernel_mode="reference")[0], x, dt, A, Bm, C, Dp,
+                 label="kernel:mamba2_scan")
     rows.append(["mamba2_scan", us, err])
 
     # tlb_sim
@@ -109,7 +135,8 @@ def run(quick: bool = False):
     ref = tlb_sim(s, t, 64, 4, kernel_mode="reference")
     pal = tlb_sim(s, t, 64, 4, block=512, kernel_mode="pallas_interpret")
     err = float((np.asarray(ref) != np.asarray(pal)).mean())
-    us = _timeit(lambda a, b: tlb_sim(a, b, 64, 4, kernel_mode="reference"), s, t)
+    us = _timeit(lambda a, b: tlb_sim(a, b, 64, 4, kernel_mode="reference"), s, t,
+                 label="kernel:tlb_sim")
     rows.append(["tlb_sim", us, err])
 
     # stackdist segmented stack scan
@@ -126,7 +153,7 @@ def run(quick: bool = False):
     err = float((np.asarray(dref) != np.asarray(dpal)).mean()
                 + (np.asarray(fref) != np.asarray(fpal)).mean())
     us = _timeit(lambda a, b, c: stack_scan(a, b, c, kernel_mode="reference")[0],
-                 tags, flags, init)
+                 tags, flags, init, label="kernel:stackdist_scan")
     rows.append(["stackdist_scan", us, err])
 
     # timeline queueing scan
@@ -149,7 +176,7 @@ def run(quick: bool = False):
     err = float(sum((np.asarray(r) != np.asarray(p)).mean()
                     for r, p in zip(ref, pal)))
     us = _timeit(lambda *a: timeline_sim(*a, tp, kernel_mode="reference")[0],
-                 *tl_inputs)
+                 *tl_inputs, label="kernel:timeline_sim")
     rows.append(["timeline_sim", us, err])
 
     print_csv("Kernel benches", ["kernel", "us_per_call(ref/XLA)", "max_err_vs_oracle"], rows)
@@ -157,10 +184,14 @@ def run(quick: bool = False):
     for name, _, err in rows:
         assert err < 5e-4, (name, err)
 
-    _sweep_bench(quick)
-    _timeline_bench(quick)
-    _timeline_batched_bench(quick)
-    _system_batched_bench(quick)
+    with _step("sweep_bench", profile):
+        _sweep_bench(quick)
+    with _step("timeline_bench", profile):
+        _timeline_bench(quick)
+    with _step("timeline_batched_bench", profile):
+        _timeline_batched_bench(quick)
+    with _step("system_batched_bench", profile):
+        _system_batched_bench(quick)
     check_bench_history()
     return []
 
@@ -213,7 +244,7 @@ def _sweep_bench(quick: bool):
 
     def timed(mode):
         m = measure(sweep_tlb, tr.lines, specs, kernel_mode=mode,
-                    reps=ENGINE_REPS)
+                    reps=ENGINE_REPS, label=f"sweep:{mode}")
         return m, m.result
 
     m_ref, ref = timed("reference")
@@ -286,7 +317,8 @@ def _timeline_bench(quick: bool):
 
     def timed(mode):
         m = measure(timeline.simulate_timeline, inter, ev, "sparta", lat,
-                    kernel_mode=mode, reps=ENGINE_REPS, **kw)
+                    kernel_mode=mode, reps=ENGINE_REPS,
+                    label=f"timeline:{mode}", **kw)
         return m, m.result
 
     m_ref, ref = timed("reference")
@@ -366,8 +398,8 @@ def _timeline_batched_bench(quick: bool):
                 inter, evs[1], "sparta", cfg=queues, num_partitions=32,
                 num_accelerators=A, accel_ids=ids))
 
-    def timed(fn):
-        m = measure(fn, reps=ENGINE_REPS)
+    def timed(fn, label):
+        m = measure(fn, reps=ENGINE_REPS, label=label)
         return m, m.result
 
     def looped():
@@ -378,11 +410,13 @@ def _timeline_batched_bench(quick: bool):
             kernel_mode="reference") for sp in specs]
 
     pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
-    m_loop, ref = timed(looped)
+    m_loop, ref = timed(looped, "timeline_batched:looped")
     m_bat, bat = timed(
-        lambda: timeline.sweep_timeline(specs, lat, kernel_mode="reference"))
+        lambda: timeline.sweep_timeline(specs, lat, kernel_mode="reference"),
+        "timeline_batched:reference")
     m_pal, pal = timed(
-        lambda: timeline.sweep_timeline(specs, lat, kernel_mode=pallas_mode))
+        lambda: timeline.sweep_timeline(specs, lat, kernel_mode=pallas_mode),
+        f"timeline_batched:{pallas_mode}")
     t_loop, t_bat, t_pal = m_loop.best_s, m_bat.best_s, m_pal.best_s
 
     def identical(xs):
@@ -469,14 +503,17 @@ def _system_batched_bench(quick: bool):
                         accel_probe_on_miss_only=False),
     ]
 
-    def timed(fn):
-        m = measure(fn, reps=ENGINE_REPS)
+    def timed(fn, label):
+        m = measure(fn, reps=ENGINE_REPS, label=label)
         return m, m.result
 
     pallas_mode = "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
-    m_loop, ref = timed(lambda: [simulate_system(tr.lines, c) for c in cfgs])
-    m_bat, bat = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode="reference"))
-    m_pal, pal = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode=pallas_mode))
+    m_loop, ref = timed(lambda: [simulate_system(tr.lines, c) for c in cfgs],
+                        "system_batched:looped")
+    m_bat, bat = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode="reference"),
+                       "system_batched:reference")
+    m_pal, pal = timed(lambda: sweep_system(tr.lines, cfgs, kernel_mode=pallas_mode),
+                       f"system_batched:{pallas_mode}")
     t_loop, t_bat, t_pal = m_loop.best_s, m_bat.best_s, m_pal.best_s
 
     def identical(bev):
@@ -527,7 +564,7 @@ REQUIRED_BENCHES = ("sweep", "timeline", "timeline_batched", "system_batched")
 
 
 def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH,
-                        refs_path: pathlib.Path = None) -> None:
+                        refs_path: pathlib.Path = None) -> dict:
     """The CI perf gate over the recorded BENCH_sweep.json history.
 
     Fails on (1) a corrupt/unparseable history file, (2) any recorded row
@@ -535,11 +572,13 @@ def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH,
     backend is not a result — (3) a required bench with no recorded row,
     and (4) any recorded wall time outside its references.json tolerance
     band (the ReFrame-style regression gate, ``benchmarks/perfcheck.py``).
+    Returns the perfcheck machine-readable summary (``{}`` when no history
+    file exists yet).
     """
     from benchmarks import perfcheck
 
     if not path.exists():
-        return
+        return {}
     hist = perfcheck.load_history(path).get("history", [])
     bad = [
         (i, e) for i, e in enumerate(hist)
@@ -560,7 +599,7 @@ def check_bench_history(path: pathlib.Path = BENCH_SWEEP_PATH,
             f"bit_identical field is on record")
     print(f"  BENCH_sweep.json: all {len(hist)} recorded rows bit-identical "
           f"({', '.join(REQUIRED_BENCHES)} covered)")
-    perfcheck.check_perf_history(
+    return perfcheck.check_perf_history(
         path, refs_path or perfcheck.REFS_PATH, history=hist)
 
 
@@ -569,6 +608,9 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the engine benches "
+                         "into DIR (one StepTraceAnnotation per bench)")
     ap.add_argument("--check", action="store_true",
                     help="verify BENCH_sweep.json: bit-identity, required-"
                          "bench coverage, and the references.json "
@@ -587,4 +629,4 @@ if __name__ == "__main__":
     elif args.check:
         check_bench_history()
     else:
-        run(quick=args.quick)
+        run(quick=args.quick, profile_dir=args.profile)

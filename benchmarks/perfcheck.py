@@ -58,6 +58,23 @@ DEFAULT_ABS_SLACK_S = 1.0
 REFS_SCHEMA_VERSION = 2
 
 
+class WarnPass(str):
+    """A warn-and-pass message that is still a plain string (callers and
+    tests treat warnings as strings) but carries the machine-readable
+    ``key`` (the row's (bench, backend, mode, quick) identity) and
+    ``reason`` (``"unreferenced"`` / ``"device_mismatch"``) that the
+    summary dict aggregates — a warn-pass CI log line should be countable
+    without regex-scraping prose."""
+
+    __slots__ = ("key", "reason")
+
+    def __new__(cls, key: str, reason: str, msg: str):
+        self = super().__new__(cls, msg)
+        self.key = key
+        self.reason = reason
+        return self
+
+
 def row_key(row: dict) -> str:
     """(bench, backend, mode, quick|full) identity of a recorded row."""
     return "|".join((
@@ -118,17 +135,19 @@ def check_rows(history: List[dict], refs_doc: dict,
         where = f"history[{i}] ({key}, written_at={row.get('written_at')!r})"
         entry = refs.get(key)
         if entry is None:
-            warnings.append(
+            warnings.append(WarnPass(
+                key, "unreferenced",
                 f"{where}: no reference for this (bench, backend, mode, "
-                f"quick) key — passing; baseline it with --update-refs")
+                f"quick) key — passing; baseline it with --update-refs"))
             continue
         ref_kind = entry.get("device_kind")
         row_kind = row.get("device_kind")
         if ref_kind is not None and row_kind != ref_kind:
-            warnings.append(
+            warnings.append(WarnPass(
+                key, "device_mismatch",
                 f"{where}: recorded on device_kind={row_kind!r} but the "
                 f"reference was baselined on {ref_kind!r} — passing; "
-                f"--update-refs on that device to start gating it")
+                f"--update-refs on that device to start gating it"))
             continue
         n_checked += 1
         for metric, spec in entry.get("metrics", {}).items():
@@ -185,18 +204,42 @@ def update_references(history: List[dict],
     return doc
 
 
+def summarize(failures: List[str], warnings: List[str],
+              n_checked: int, n_legacy: int) -> dict:
+    """Machine-readable gate outcome: warn-passes are counted by key and
+    reason instead of living only in prose — the CI log carries this as one
+    parseable ``perfcheck summary:`` JSON line."""
+    reasons: Dict[str, int] = {}
+    for w in warnings:
+        r = getattr(w, "reason", "other")
+        reasons[r] = reasons.get(r, 0) + 1
+    return {
+        "n_checked": n_checked,
+        "n_legacy": n_legacy,
+        "n_failures": len(failures),
+        "warn_pass": {
+            "count": len(warnings),
+            "keys": sorted({w.key for w in warnings if hasattr(w, "key")}),
+            "reasons": reasons,
+        },
+    }
+
+
 def check_perf_history(history_path: pathlib.Path,
                        refs_path: pathlib.Path = REFS_PATH,
-                       history: Optional[List[dict]] = None) -> None:
-    """CI entry point: SystemExit on any out-of-band metric."""
+                       history: Optional[List[dict]] = None) -> dict:
+    """CI entry point: SystemExit on any out-of-band metric; returns the
+    machine-readable :func:`summarize` dict otherwise (``{}`` with no
+    history file)."""
     if history is None:
         if not history_path.exists():
-            return
+            return {}
         history = load_history(history_path).get("history", [])
     refs_doc = load_references(refs_path)
     failures, warnings, n_checked, n_legacy = check_rows(history, refs_doc)
     for w in warnings:
         print(f"  [perfcheck warn] {w}")
+    summary = summarize(failures, warnings, n_checked, n_legacy)
     if failures:
         lines = "\n".join(f"  {f}" for f in failures)
         raise SystemExit(
@@ -207,6 +250,13 @@ def check_perf_history(history_path: pathlib.Path,
     print(f"  perfcheck: {n_checked} row(s) within reference bands "
           f"({len(warnings)} unbaselined pass(es) with warning, "
           f"{n_legacy} legacy row(s) skipped)")
+    print(f"  perfcheck summary: {json.dumps(summary, sort_keys=True)}")
+    from repro.runtime import telemetry
+
+    tr = telemetry.get_tracer()
+    if tr.active:
+        tr.event("perfcheck", **summary)
+    return summary
 
 
 def main(argv=None) -> None:

@@ -2,7 +2,12 @@
 
 ``python -m benchmarks.run [--quick] [--only figN,...] [--kernel-mode MODE]``
 Prints per-figure CSVs, the checked claims, and the roofline summary table
-(if the dry-run cache exists).  ``--kernel-mode`` selects the sweep-engine
+(if the dry-run cache exists).  Machine output (CSVs, claim lines) goes to
+stdout; narration (per-figure timings, fallback notices) goes through the
+``repro`` Python logger on stderr — ``-v`` raises it to DEBUG, ``--quiet``
+drops it to WARNING.  ``--profile DIR`` additionally captures a
+``jax.profiler`` trace of the whole run (one ``StepTraceAnnotation`` per
+figure) for TensorBoard/Perfetto.  ``--kernel-mode`` selects the sweep-engine
 backend (auto/reference/pallas/pallas_interpret/stackdist) for the figures
 that run trace sweeps (fig4/5/8/9/10/11); ``stackdist`` is the exact
 sort-based stack-distance engine, which ``auto`` already prefers for the
@@ -19,12 +24,17 @@ falls back to ``auto`` for sweep-only modes with a printed notice."""
 from __future__ import annotations
 
 import argparse
+import contextlib
 import inspect
+import logging
 import sys
 import time
 
 from repro.core.orchestrator import Preempted
 from repro.kernels.common import SWEEP_MODES
+from repro.runtime import telemetry
+
+_LOG = logging.getLogger("repro.bench.run")
 
 
 FIGS = ("fig2", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
@@ -43,7 +53,15 @@ def main(argv=None) -> None:
     ap.add_argument("--chunk-accesses", type=int, default=None,
                     help="checkpoint-commit granularity for the crash-safe "
                          "chunked sweeps (trace accesses per chunk)")
+    ap.add_argument("-v", action="count", default=0, dest="verbose",
+                    help="DEBUG narration on stderr (repeatable)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="narration at WARNING only (stdout CSVs unaffected)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the run into DIR "
+                         "(one StepTraceAnnotation per figure)")
     args = ap.parse_args(argv)
+    telemetry.setup_logging(-1 if args.quiet else args.verbose)
 
     from benchmarks import (
         fig2_pagewalk, fig4_tlb_sensitivity, fig5_contention, fig6_pagefault,
@@ -59,23 +77,36 @@ def main(argv=None) -> None:
     }
     chosen = args.only.split(",") if args.only else list(modules)
 
+    profile_cm = contextlib.nullcontext()
+    if args.profile:
+        import jax
+        profile_cm = jax.profiler.trace(args.profile)
+
     claims = []
-    for name in chosen:
-        t0 = time.perf_counter()
-        kwargs = {"quick": args.quick}
-        params = inspect.signature(modules[name].run).parameters
-        if "kernel_mode" in params:
-            kwargs["kernel_mode"] = args.kernel_mode
-        if "resume" in params:
-            kwargs["resume"] = args.resume
-        if "chunk_accesses" in params and args.chunk_accesses:
-            kwargs["chunk_accesses"] = args.chunk_accesses
-        try:
-            claims += modules[name].run(**kwargs)
-        except Preempted as exc:
-            print(f"({name}: {exc})", file=sys.stderr)
-            sys.exit(75)   # EX_TEMPFAIL: rerun with --resume
-        print(f"  ({name}: {time.perf_counter()-t0:.1f}s)")
+    with profile_cm:
+        for name in chosen:
+            t0 = time.perf_counter()
+            kwargs = {"quick": args.quick}
+            params = inspect.signature(modules[name].run).parameters
+            if "kernel_mode" in params:
+                kwargs["kernel_mode"] = args.kernel_mode
+            if "resume" in params:
+                kwargs["resume"] = args.resume
+            if "chunk_accesses" in params and args.chunk_accesses:
+                kwargs["chunk_accesses"] = args.chunk_accesses
+            step_cm = contextlib.nullcontext()
+            if args.profile:
+                import jax
+                step_cm = jax.profiler.StepTraceAnnotation(name)
+            try:
+                with step_cm:
+                    claims += modules[name].run(**kwargs)
+            except Preempted as exc:
+                _LOG.warning("%s preempted: %s", name, exc)
+                sys.exit(75)   # EX_TEMPFAIL: rerun with --resume
+            _LOG.info("%s: %.1fs", name, time.perf_counter() - t0)
+    if args.profile:
+        _LOG.info("jax profiler trace written under %s", args.profile)
 
     print("\n# Claim summary")
     n_ok = sum(c.ok for c in claims)
@@ -95,7 +126,7 @@ def main(argv=None) -> None:
                       f"{r['t_memory_s']:.4g},{r['t_collective_s']:.4g},"
                       f"{r['dominant']},{r['roofline_fraction']:.3f}")
     except Exception as e:  # dry-run cache may not exist yet
-        print(f"(roofline table skipped: {e})")
+        _LOG.info("roofline table skipped: %s", e)
 
     # C2b is a documented out-of-band cell (EXPERIMENTS.md §Paper claims);
     # fail only if reproduction quality actually regresses.

@@ -87,13 +87,18 @@ class Measurement:
 
 
 def measure(fn: Callable, *args, reps: int = 5, warmup: int = 1,
-            **kwargs) -> Measurement:
+            label: str = None, **kwargs) -> Measurement:
     """Min-of-``reps`` wall-clock timing of ``fn(*args, **kwargs)``.
 
     Blocks until ready on every warm-up call (so compile/dispatch cannot
     leak into the first rep's window) and on every rep's own result *inside*
     its timed window.  Uses ``time.perf_counter`` (monotonic, high
     resolution).
+
+    With ``label`` set, the measurement is also recorded as a ``"measure"``
+    span in the active telemetry run (duration = the summed timed reps,
+    warm-up excluded; best/mean/spread as span attributes) — no-op when no
+    run is active.
     """
     if reps < 1:
         raise ValueError(f"reps must be >= 1, got {reps}")
@@ -104,7 +109,15 @@ def measure(fn: Callable, *args, reps: int = 5, warmup: int = 1,
         t0 = time.perf_counter()
         res = block(fn(*args, **kwargs))
         times.append(time.perf_counter() - t0)
-    return Measurement(times_s=tuple(times), result=res)
+    m = Measurement(times_s=tuple(times), result=res)
+    if label is not None:
+        from repro.runtime import telemetry
+
+        telemetry.get_tracer().record_span(
+            "measure", sum(times), label=label, reps=reps,
+            best_s=round(m.best_s, 6), mean_s=round(m.mean_s, 6),
+            spread_frac=round(m.spread_frac, 4))
+    return m
 
 
 def device_metadata() -> dict:

@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import pathlib
 import random
@@ -79,11 +80,21 @@ from repro.core.tlbsim import SystemSimConfig
 from repro.kernels.common import SWEEP_MODES, VALID_MODES, resolve_mode
 from repro.kernels.system_sim import resolve_system_mode
 from repro.kernels.timeline import resolve_timeline_mode
+from repro.runtime import telemetry
 from repro.runtime.fault_tolerance import (
     PreemptionHandler,
     backoff_delays,
     is_transient,
 )
+
+_LOG = logging.getLogger("repro.core.orchestrator")
+
+# Narration level per ladder event: anything that changes how the run
+# executes (fell back, split, degraded, preempted) is a warning; resuming is
+# the expected happy path of --resume.
+_EVENT_LEVELS = {"retry": logging.WARNING, "halve": logging.WARNING,
+                 "downgrade": logging.WARNING, "preempt": logging.WARNING,
+                 "resume": logging.INFO}
 
 __all__ = [
     "SweepRunConfig",
@@ -163,7 +174,13 @@ class _ChunkRunner:
         self.cfg = cfg
         self.name = name
         B = len(stream.specs) if hasattr(stream, "specs") else len(stream.cfgs)
+        self.batch = B
         self.bufs = [np.zeros((B, self.total), dt) for dt in out_dtypes]
+        # mode -> {chunks, accesses, sim_accesses, elapsed_s}: achieved
+        # throughput per backend actually executed (meta()["throughput"],
+        # thence the figure-JSON _telemetry stamp) — recorded even with the
+        # tracer disabled, it is plain accumulation.
+        self.throughput: dict = {}
         start_mode = resolve_mode(start_mode)  # never "auto" past this point
         self.ladder = LADDER[LADDER.index(start_mode):]
         self.rung = 0
@@ -241,6 +258,9 @@ class _ChunkRunner:
             self.rung = self.ladder.index(mode)
         self.chunks_committed = int(meta.get("chunks_committed", 0))
         self.resumed_from = now
+        self._log("resume", now, self.total,
+                  chunks_committed=self.chunks_committed,
+                  completed=bool(meta.get("completed")))
         return meta if meta.get("completed") else None
 
     # -- the ladder ---------------------------------------------------------
@@ -251,18 +271,61 @@ class _ChunkRunner:
         # The blob (written with the incremented count) is the commit point:
         # the in-memory counter moves only once the write has succeeded, so
         # meta/events never claim one more durable chunk than disk holds.
+        t0 = time.perf_counter()
         self._write_checkpoint(completed=False,
                                chunks_committed=self.chunks_committed + 1)
         self.chunks_committed += 1
+        if self.path is not None:
+            telemetry.get_tracer().event(
+                "checkpoint_write", engine=self.stream.engine, name=self.name,
+                chunk=self.chunks_committed,
+                dur_s=round(time.perf_counter() - t0, 6))
         if self.cfg.on_chunk_committed is not None:
             self.cfg.on_chunk_committed(self.chunks_committed - 1)
         pre = self.cfg.preemption
         if pre is not None and pre.requested:
+            self._log("preempt", int(self.stream.now), self.total,
+                      chunks_committed=self.chunks_committed)
             raise Preempted(self.path, int(self.stream.now), self.total)
 
     def _log(self, event: str, lo: int, hi: int, **kw) -> None:
-        self.events.append({"event": event, "lo": int(lo), "hi": int(hi),
-                            "mode": self.ladder[self.rung], **kw})
+        """Record one ladder event into meta["events"], the telemetry run
+        log, and the narration logger.  Every event carries a wall-clock
+        (``ts``) and monotonic (``t_mono``) stamp so a degraded run can be
+        reconstructed post-hoc."""
+        rec = {"event": event, "lo": int(lo), "hi": int(hi),
+               "mode": self.ladder[self.rung],
+               "ts": time.time(), "t_mono": time.perf_counter(), **kw}
+        self.events.append(rec)
+        telemetry.get_tracer().event(
+            event, engine=self.stream.engine, name=self.name,
+            **{k: v for k, v in rec.items()
+               if k not in ("event", "ts", "t_mono")})
+        _LOG.log(_EVENT_LEVELS.get(event, logging.INFO),
+                 "%s[%s] %s [%d, %d) mode=%s%s",
+                 self.stream.engine, self.name, event, rec["lo"], rec["hi"],
+                 rec["mode"],
+                 "".join(f" {k}={v}" for k, v in kw.items()))
+
+    def _note_chunk(self, lo: int, hi: int, mode: str, attempt: int,
+                    dur_s: float) -> None:
+        """Account a successful chunk attempt: per-mode throughput (always)
+        plus a telemetry chunk span (when a run is active)."""
+        n = int(hi - lo)
+        agg = self.throughput.setdefault(
+            mode, {"chunks": 0, "accesses": 0, "sim_accesses": 0,
+                   "elapsed_s": 0.0})
+        agg["chunks"] += 1
+        agg["accesses"] += n
+        agg["sim_accesses"] += n * self.batch
+        agg["elapsed_s"] += dur_s
+        telemetry.get_tracer().record_span(
+            "chunk", dur_s, engine=self.stream.engine, name=self.name,
+            lo=int(lo), hi=int(hi), mode=mode, attempt=attempt,
+            accesses=n, configs=self.batch,
+            accesses_per_s=round(n / dur_s, 1) if dur_s > 0 else None,
+            sim_accesses_per_s=(round(n * self.batch / dur_s, 1)
+                                if dur_s > 0 else None))
 
     def _exec(self, lo: int, hi: int) -> None:
         """Run span [lo, hi) through retries -> halving -> downgrade."""
@@ -279,6 +342,7 @@ class _ChunkRunner:
             # advanced state (double-applied hits, drifted `now`) and then
             # checkpoint the corrupted prefix as good.  A failed commit must
             # propagate, leaving the previous blob as the resume point.
+            t0 = time.perf_counter()
             try:
                 if self.cfg.fault_hook is not None:
                     self.cfg.fault_hook(self.stream.engine, lo, hi, mode, attempt)
@@ -288,10 +352,12 @@ class _ChunkRunner:
                     raise
                 last_exc = exc
                 self._log("retry", lo, hi, attempt=attempt,
+                          elapsed_s=round(time.perf_counter() - t0, 6),
                           error=f"{type(exc).__name__}: {exc}")
                 if attempt < self.cfg.max_retries:
                     time.sleep(delays[attempt])
                 continue
+            self._note_chunk(lo, hi, mode, attempt, time.perf_counter() - t0)
             self._commit(lo, hi, outs)
             return
         # Retries exhausted.  Halve if the span spans more than one block,
@@ -349,7 +415,26 @@ class _ChunkRunner:
             "resumed_from": self.resumed_from,
             "completed_from_checkpoint": completed_from_checkpoint,
             "checkpoint": str(self.path) if self.path else None,
+            "throughput": _throughput_meta(self.throughput),
         }
+
+
+def _throughput_meta(agg_by_mode: dict) -> dict:
+    """Finish the per-mode accumulators into achieved accesses/s (trace
+    accesses and simulated config x access pairs per second of engine
+    wall time)."""
+    out = {}
+    for mode, a in agg_by_mode.items():
+        dt = a["elapsed_s"]
+        out[mode] = {
+            "chunks": a["chunks"], "accesses": a["accesses"],
+            "sim_accesses": a["sim_accesses"],
+            "elapsed_s": round(dt, 6),
+            "accesses_per_s": round(a["accesses"] / dt, 1) if dt > 0 else None,
+            "sim_accesses_per_s": (round(a["sim_accesses"] / dt, 1)
+                                   if dt > 0 else None),
+        }
+    return out
 
 
 def _sha256_arrays(*arrays: np.ndarray) -> str:
@@ -395,12 +480,27 @@ def run_sweep_tlb(
         kernel_mode, valid=SWEEP_MODES,
         prefer="stackdist" if _stackdist_eligible(specs) else None)
     if mode == "stackdist":
+        # Monolithic, but still measured: the stackdist engine's achieved
+        # accesses/s lands in meta["throughput"] (and a single whole-trace
+        # "chunk" span in the run log) just like the streamed backends'.
+        n = int(addrs.shape[0])
+        t0 = time.perf_counter()
         res = sweep_tlb(addrs, specs, warmup_frac=warmup_frac,
                         kernel_mode=mode, block=block)
+        dur = time.perf_counter() - t0
+        telemetry.get_tracer().record_span(
+            "chunk", dur, engine="sweep_tlb", name=name, lo=0, hi=n,
+            mode=mode, attempt=0, accesses=n, configs=len(specs),
+            accesses_per_s=round(n / dur, 1) if dur > 0 else None,
+            sim_accesses_per_s=(round(n * len(specs) / dur, 1)
+                                if dur > 0 else None))
+        agg = {mode: {"chunks": 1, "accesses": n,
+                      "sim_accesses": n * len(specs), "elapsed_s": dur}}
         return res, {"engine": "sweep_tlb", "resumable": False,
                      "start_mode": mode, "final_mode": mode, "events": [],
                      "chunks_committed": 0, "resumed_from": None,
-                     "completed_from_checkpoint": False, "checkpoint": None}
+                     "completed_from_checkpoint": False, "checkpoint": None,
+                     "throughput": _throughput_meta(agg)}
 
     run, handler = _maybe_handler(run)
     try:

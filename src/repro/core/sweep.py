@@ -68,6 +68,7 @@ from repro.core.tlbsim import (
 from repro.kernels.common import SWEEP_MODES, resolve_mode
 from repro.kernels.system_sim import resolve_system_mode, system_sim_batched
 from repro.kernels.system_sim.ref import system_sim_batched_ref as _scan_system_batched
+from repro.runtime import telemetry
 
 __all__ = [
     "TLBSweepSpec",
@@ -78,6 +79,32 @@ __all__ = [
     "sweep_tlb",
     "sweep_system",
 ]
+
+
+def _note_envelope(stream) -> None:
+    """Telemetry event + gauge describing a stream's VMEM-envelope grouping
+    (how the chunker packed the batch, and the carried-state footprint).
+    Free when no telemetry run is active."""
+    tr = telemetry.get_tracer()
+    if not tr.active:
+        return
+    state = stream.export_state()
+    state_bytes = int(sum(v.nbytes for k, v in state.items() if k != "now"))
+    tr.event("vmem_envelope", engine=stream.engine,
+             configs=stream.batch_size, groups=len(stream.groups),
+             group_sizes=[len(g) for g in stream.groups],
+             state_bytes=state_bytes, block=stream.block)
+    tr.gauge(f"{stream.engine}.state_bytes").set(state_bytes)
+
+
+def _count_sim_accesses(stream, n: int) -> None:
+    """Counters for one committed chunk: trace accesses consumed and
+    simulated (config x access) pairs advanced."""
+    tr = telemetry.get_tracer()
+    if not tr.active:
+        return
+    tr.counter(f"{stream.engine}.trace_accesses").add(int(n))
+    tr.counter(f"{stream.engine}.sim_accesses").add(int(n) * stream.batch_size)
 
 
 # ---------------------------------------------------------------------------
@@ -305,6 +332,11 @@ class TLBSweepStream:
             # chunk may be block-padded mid-stream without observable effect.
             self._state.append(padded_tlb_state(len(g), sets + 1, ways, valid))
         self.now = 0
+        _note_envelope(self)
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.specs)
 
     def fingerprint(self) -> dict:
         """JSON-able identity of the stream's layout: a checkpoint taken by
@@ -338,6 +370,7 @@ class TLBSweepStream:
             new_state.append((tags, last))
         self._state = new_state
         self.now += n
+        _count_sim_accesses(self, n)
         return hits
 
     def export_state(self) -> dict:
@@ -588,6 +621,11 @@ class SystemSweepStream:
                 st += list(padded_tlb_state(len(g), sets + 1, ways, valid))
             self._state.append(tuple(st))
         self.now = 0
+        _note_envelope(self)
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.cfgs)
 
     def fingerprint(self) -> dict:
         return {
@@ -622,6 +660,7 @@ class SystemSweepStream:
             new_state.append(st)
         self._state = new_state
         self.now += n
+        _count_sim_accesses(self, n)
         return tuple(hits)
 
     def export_state(self) -> dict:

@@ -459,6 +459,12 @@ class TimelineSweepStream:
             self._state.append(timeline_init_state_batched(
                 len(g), env, jnp.asarray(self.iparams[g, 5])))
         self.now = 0
+        from repro.core.sweep import _note_envelope
+        _note_envelope(self)
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.specs)
 
     def fingerprint(self) -> dict:
         return {
@@ -506,6 +512,8 @@ class TimelineSweepStream:
             new_state.append(st)
         self._state = new_state
         self.now = hi
+        from repro.core.sweep import _count_sim_accesses
+        _count_sim_accesses(self, L)
         return tuple(outs)
 
     def export_state(self) -> dict:

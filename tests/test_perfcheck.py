@@ -150,6 +150,33 @@ def test_check_rows_unknown_device_warns_and_passes():
     assert n_checked == 0
 
 
+def test_warn_pass_is_string_with_key_and_reason():
+    # Warn-pass messages stay plain strings for human logs but carry the
+    # machine-readable row key + reason the summary aggregates.
+    _, warns, _, _ = perfcheck.check_rows(
+        [_row(device_kind="TPU v4")], _refs())
+    w = warns[0]
+    assert isinstance(w, str)
+    assert w.key == "sweep|cpu|-|quick" and w.reason == "device_mismatch"
+    _, warns, _, _ = perfcheck.check_rows([_row(bench="timeline")], _refs())
+    assert warns[0].reason == "unreferenced"
+
+
+def test_check_perf_history_returns_parseable_summary(tmp_path, capsys):
+    hist = tmp_path / "BENCH_sweep.json"
+    hist.write_text(json.dumps(
+        {"history": [_row(bench="timeline"), _row(bench="timeline")]}))
+    summary = perfcheck.check_perf_history(hist, tmp_path / "refs.json")
+    assert summary["n_failures"] == 0 and summary["n_checked"] == 0
+    assert summary["warn_pass"]["count"] == 2
+    assert summary["warn_pass"]["keys"] == ["timeline|cpu|-|quick"]
+    assert summary["warn_pass"]["reasons"] == {"unreferenced": 2}
+    # The CI log carries the summary as one parseable JSON line.
+    line = [ln for ln in capsys.readouterr().out.splitlines()
+            if "perfcheck summary:" in ln][0]
+    assert json.loads(line.split("perfcheck summary:", 1)[1]) == summary
+
+
 def test_check_rows_unreferenced_key_warns_and_passes():
     fails, warns, _, _ = perfcheck.check_rows(
         [_row(bench="timeline", mode="pallas", backend="tpu")], _refs())
@@ -225,9 +252,11 @@ def _full_history(**overrides):
 def test_check_bench_history_passes_on_clean_history(tmp_path, capsys):
     hist = tmp_path / "BENCH_sweep.json"
     hist.write_text(json.dumps(_full_history()))
-    kernel_bench.check_bench_history(hist, refs_path=tmp_path / "refs.json")
+    summary = kernel_bench.check_bench_history(
+        hist, refs_path=tmp_path / "refs.json")
     out = capsys.readouterr().out
     assert "bit-identical" in out and "perfcheck" in out
+    assert summary["warn_pass"]["count"] == len(_full_history()["history"])
 
 
 def test_check_bench_history_missing_bench_fails(tmp_path):
