@@ -4,9 +4,11 @@ from __future__ import annotations
 
 import functools
 import json
+import os
 import pathlib
 import time
-from typing import Dict, List
+import uuid
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -69,20 +71,68 @@ def run_config(fig: str, *, resume: bool = False, chunk_accesses=None):
     return SweepRunConfig(**kw)
 
 
+def sched_config(*, workers: int = 1, shards: int = 0,
+                 deadline: Optional[float] = None, executor: str = "auto"):
+    """Build the driver-facing :class:`repro.core.scheduler.ScheduleConfig`
+    — or ``None`` (pure unsharded passthrough) when nothing asks for
+    scheduling.  Worker run logs land next to the figure's own
+    (``_cache/runlogs/``); ``REPRO_SCHED_HOLD_S`` is the CI smoke's seam for
+    holding each shard's first attempt open long enough to SIGKILL a worker
+    mid-shard."""
+    from repro.core.scheduler import ScheduleConfig
+
+    sched = ScheduleConfig(
+        workers=int(workers), shards=int(shards), deadline_s=deadline,
+        executor=executor,
+        lease_ttl_s=float(os.environ.get("REPRO_SCHED_LEASE_TTL_S", 5.0)),
+        heartbeat_s=float(os.environ.get("REPRO_SCHED_HEARTBEAT_S", 1.0)),
+        hold_s=float(os.environ.get("REPRO_SCHED_HOLD_S", 0.0) or 0.0),
+        runlog_dir=str(RUNLOGS))
+    return sched if sched.enabled else None
+
+
+# Figures whose last run completed degraded (quarantined shards): the run.py
+# driver loop and standalone figure mains exit with scheduler.EX_DEGRADED
+# when this is non-empty.
+_DEGRADED_RUNS: List[str] = []
+
+
+def degraded_runs() -> List[str]:
+    return list(_DEGRADED_RUNS)
+
+
 def crash_safety(metas: Dict[str, dict]) -> dict:
     """Figure-JSON stamp of how each orchestrated engine call executed:
-    backend ladder start/end, every retry/halve/downgrade event, and where a
-    resumed run re-entered.  Underscore-prefixed in payloads (like
-    ``_written_at`` / ``_device``) so resume-identity comparisons drop it."""
-    return {
-        name: {
+    backend ladder start/end, every retry/halve/downgrade event, where a
+    resumed run re-entered — and, for scheduled (sharded) calls, the shard
+    map and the quarantined-shard manifest.  Underscore-prefixed in payloads
+    (like ``_written_at`` / ``_device``) so resume-identity comparisons drop
+    it."""
+    out = {}
+    quarantined = {}
+    for name, m in metas.items():
+        rec = {
             "start_mode": m["start_mode"], "final_mode": m["final_mode"],
             "resumable": m["resumable"], "resumed_from": m["resumed_from"],
             "completed_from_checkpoint": m["completed_from_checkpoint"],
             "events": m["events"],
         }
-        for name, m in metas.items()
-    }
+        s = m.get("scheduler")
+        if s:
+            rec["scheduler"] = {
+                "shards": s["shards"], "workers": s["workers"],
+                "executor": s["executor"], "shard_map": s["shard_map"],
+                "events": [e["event"] for e in s["events"]],
+            }
+            if s.get("quarantined_shards"):
+                quarantined[name] = s["quarantined_shards"]
+        out[name] = rec
+    out["quarantined_shards"] = quarantined
+    if quarantined:
+        run = telemetry.get_tracer().run or "?"
+        if run not in _DEGRADED_RUNS:
+            _DEGRADED_RUNS.append(run)
+    return out
 
 
 def with_runlog(fig: str):
@@ -119,6 +169,7 @@ def telemetry_stamp(metas: Dict[str, dict] = None) -> dict:
 
 
 def save_fig(name: str, payload: dict):
+    from repro.checkpoint.checkpoint import file_lock
     from repro.core import benchtime
 
     FIGS.mkdir(parents=True, exist_ok=True)
@@ -132,7 +183,13 @@ def save_fig(name: str, payload: dict):
     # gets the plain run summary.
     if "_telemetry" not in payload and telemetry.get_tracer().active:
         payload["_telemetry"] = telemetry_stamp()
-    (FIGS / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
+    # Lock + write-tmp + atomic replace: concurrent scheduler workers (or
+    # two driver invocations) can never interleave into a torn figure JSON.
+    path = FIGS / f"{name}.json"
+    with file_lock(path.with_name(path.name + ".lock")):
+        tmp = path.with_name(f"{path.name}.tmp-{uuid.uuid4().hex[:8]}")
+        tmp.write_text(json.dumps(payload, indent=1, default=float))
+        os.replace(tmp, path)
 
 
 def load_fig(name: str):

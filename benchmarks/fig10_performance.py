@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
                                save_fig, telemetry_stamp, trace, with_runlog)
 from repro.core import cpi
-from repro.core.orchestrator import run_sweep_system
+from repro.core.scheduler import run_sweep_system
 from repro.core.sparta import SystemLatencies, TLBConfig
 from repro.core.tlbsim import SystemSimConfig
 
@@ -36,7 +36,7 @@ CONFIGS = (  # (label, partitions, page_shift, design)
 
 @with_runlog("fig10")
 def run(quick: bool = False, kernel_mode: str = "auto",
-        resume: bool = False, chunk_accesses=None):
+        resume: bool = False, chunk_accesses=None, sched=None):
     n_ops = 8_000 if quick else 25_000
     lat = SystemLatencies(n_sockets=8)
     rc = run_config("fig10", resume=resume, chunk_accesses=chunk_accesses)
@@ -58,7 +58,7 @@ def run(quick: bool = False, kernel_mode: str = "auto",
                 accel_probe_on_miss_only=True,
             )
             for _, parts, shift, design in CONFIGS
-        ], kernel_mode=kernel_mode, run=rc, name=f"system-{w}")
+        ], kernel_mode=kernel_mode, run=rc, name=f"system-{w}", sched=sched)
         perfs = {}
         for i_c, (label, parts, shift, design) in enumerate(CONFIGS):
             perfs[label] = cpi.evaluate_design(

@@ -32,7 +32,7 @@ import numpy as np
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
                                save_fig, telemetry_stamp, with_runlog)
 from repro.core import timeline, traces
-from repro.core.orchestrator import run_sweep_system, run_sweep_timeline
+from repro.core.scheduler import run_sweep_system, run_sweep_timeline
 from repro.core.sparta import SystemLatencies, TLBConfig
 from repro.core.tlbsim import SystemSimConfig
 
@@ -45,7 +45,7 @@ QUEUES = timeline.TimelineConfig(mshrs=8, tlb_ports=1, dram_banks=16)
 
 @with_runlog("fig11")
 def run(quick: bool = False, kernel_mode: str = "auto",
-        resume: bool = False, chunk_accesses=None):
+        resume: bool = False, chunk_accesses=None, sched=None):
     accels = (1, 4, 16) if quick else (1, 2, 4, 8, 16)
     n_ops = 1_000 if quick else 8_000
     # The crash-safe chunked engines stream the trace with a bounded
@@ -70,7 +70,7 @@ def run(quick: bool = False, kernel_mode: str = "auto",
             SystemSimConfig(cache=CACHE, accel_tlb=None,
                             mem_tlb=MEM_TLB, num_partitions=PARTITIONS,
                             page_shift=12),
-        ], kernel_mode=kernel_mode, run=rc, name=f"system-{w}")
+        ], kernel_mode=kernel_mode, run=rc, name=f"system-{w}", sched=sched)
         for A in accels:
             ids = timeline.round_robin_accel_ids(inter.shape[0], A)
             specs.append(timeline.TimelineSpec(
@@ -81,7 +81,8 @@ def run(quick: bool = False, kernel_mode: str = "auto",
                 num_partitions=PARTITIONS, num_accelerators=A, accel_ids=ids))
             cells.append((w, A))
     results, metas["timeline"] = run_sweep_timeline(
-        specs, lat, kernel_mode=kernel_mode, run=rc, name="timeline")
+        specs, lat, kernel_mode=kernel_mode, run=rc, name="timeline",
+        sched=sched)
 
     rows = []
     p99 = {}       # (workload, A) -> (conventional, sparta)
@@ -124,12 +125,15 @@ def run(quick: bool = False, kernel_mode: str = "auto",
 
 
 def main(argv=None) -> int:
-    """Standalone entry point with resume support (the CI fault-injection
-    smoke SIGTERMs this mid-sweep, then reruns it with ``--resume``)."""
+    """Standalone entry point with resume + scheduler support (the CI
+    fault-injection smokes SIGTERM this mid-sweep and rerun it with
+    ``--resume``, or SIGKILL one of its ``--workers`` mid-shard)."""
     import argparse
     import sys
 
+    from benchmarks import common
     from repro.core.orchestrator import Preempted
+    from repro.core.scheduler import EX_DEGRADED
     from repro.runtime import telemetry
 
     telemetry.setup_logging()
@@ -140,13 +144,28 @@ def main(argv=None) -> int:
                     help="re-enter from the last committed chunk checkpoint")
     ap.add_argument("--chunk-accesses", type=int, default=None,
                     help="checkpoint-commit granularity (trace accesses)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel sweep workers (sharded scheduler)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shards per engine call (0 = auto, 2x workers)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-shard straggler deadline (seconds)")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "serial", "thread", "process"))
     args = ap.parse_args(argv)
+    sched = common.sched_config(workers=args.workers, shards=args.shards,
+                                deadline=args.deadline, executor=args.executor)
     try:
         claims = run(quick=args.quick, kernel_mode=args.kernel_mode,
-                     resume=args.resume, chunk_accesses=args.chunk_accesses)
+                     resume=args.resume, chunk_accesses=args.chunk_accesses,
+                     sched=sched)
     except Preempted as p:
         print(f"fig11: {p}", file=sys.stderr)
         return 75   # EX_TEMPFAIL: rerun with --resume
+    if common.degraded_runs():
+        print(f"fig11: degraded — quarantined shards "
+              f"(see _crash_safety in the figure JSON)", file=sys.stderr)
+        return EX_DEGRADED
     return 0 if all(c.ok for c in claims) else 1
 
 

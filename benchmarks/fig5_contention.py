@@ -26,8 +26,8 @@ import numpy as np
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
                                save_fig, telemetry_stamp, with_runlog)
 from repro.core import timeline, traces
-from repro.core.orchestrator import (run_sweep_system, run_sweep_timeline,
-                                     run_sweep_tlb)
+from repro.core.scheduler import (run_sweep_system, run_sweep_timeline,
+                                  run_sweep_tlb)
 from repro.core.sparta import SystemLatencies, TLBConfig
 from repro.core.sweep import TLBSweepSpec
 from repro.core.tlbsim import SystemSimConfig
@@ -43,7 +43,7 @@ _LOG = logging.getLogger("repro.bench.fig5")
 
 @with_runlog("fig5")
 def run(quick: bool = False, kernel_mode: str = "auto",
-        resume: bool = False, chunk_accesses=None):
+        resume: bool = False, chunk_accesses=None, sched=None):
     n_ops = 4_000 if quick else 12_000
     tl_cap = 12_000 if quick else 40_000
     t_max = THREADS[-1]
@@ -61,7 +61,7 @@ def run(quick: bool = False, kernel_mode: str = "auto",
                 inter_max[w] = inter
             batched, metas[f"tlb-{w}-t{t}"] = run_sweep_tlb(
                 inter, specs, kernel_mode=kernel_mode, run=rc,
-                name=f"tlb-{w}-t{t}")
+                name=f"tlb-{w}-t{t}", sched=sched)
             grid[:, i_t] = batched.miss_ratios
         for i_p, p in enumerate(PARTS):
             results[f"{w}/P{p}"] = [float(x) for x in grid[i_p]]
@@ -100,13 +100,14 @@ def run(quick: bool = False, kernel_mode: str = "auto",
             SystemSimConfig(cache=CACHE, accel_tlb=None, mem_tlb=TLB,
                             num_partitions=p, page_shift=12)
             for p in PARTS
-        ], kernel_mode=tl_mode, run=rc, name=f"system-{w}")
+        ], kernel_mode=tl_mode, run=rc, name=f"system-{w}", sched=sched)
         for i_p, p in enumerate(PARTS):
             tl_specs.append(timeline.TimelineSpec(
                 sl, evs[i_p], "sparta", cfg=QUEUES, num_partitions=p,
                 num_accelerators=t_max))
     tl_res, metas["timeline"] = run_sweep_timeline(
-        tl_specs, lat, kernel_mode=tl_mode, run=rc, name="timeline")
+        tl_specs, lat, kernel_mode=tl_mode, run=rc, name="timeline",
+        sched=sched)
     tl_p99 = {}
     tl_rows = []
     for i, w in enumerate(W4):

@@ -12,7 +12,7 @@ from benchmarks.common import (Claim, GIB, crash_safety, print_csv,
                                run_config, save_fig, telemetry_stamp,
                                with_runlog)
 from repro.core import traces
-from repro.core.orchestrator import run_sweep_tlb
+from repro.core.scheduler import run_sweep_tlb
 from repro.core.sparta import TLBConfig
 from repro.core.sweep import TLBSweepSpec
 
@@ -40,7 +40,7 @@ def _mix(n_ops, seed, spec):
 
 @with_runlog("fig8")
 def run(quick: bool = False, kernel_mode: str = "auto",
-        resume: bool = False, chunk_accesses=None):
+        resume: bool = False, chunk_accesses=None, sched=None):
     n_ops = 4_000 if quick else 10_000
     fp32 = 32 * GIB
     rc = run_config("fig8", resume=resume, chunk_accesses=chunk_accesses)
@@ -66,6 +66,7 @@ def run(quick: bool = False, kernel_mode: str = "auto",
             inter >> (12 - 6),
             [TLBSweepSpec(TLB, num_partitions=p) for p in PARTS],
             kernel_mode=kernel_mode, run=rc, name=f"tlb-{name}",
+            sched=sched,
         )
         line = []
         for i_p, _ in enumerate(PARTS):

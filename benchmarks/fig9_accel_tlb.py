@@ -14,7 +14,7 @@ import numpy as np
 from benchmarks.common import (Claim, W4, crash_safety, print_csv, run_config,
                                save_fig, telemetry_stamp, trace, with_runlog)
 from repro.core import cpi
-from repro.core.orchestrator import run_sweep_system
+from repro.core.scheduler import run_sweep_system
 from repro.core.sparta import SystemLatencies, TLBConfig
 from repro.core.tlbsim import SystemSimConfig
 
@@ -26,7 +26,7 @@ CACHE = TLBConfig(entries=256, ways=4)  # 16KB / 64B lines
 
 @with_runlog("fig9")
 def run(quick: bool = False, kernel_mode: str = "auto",
-        resume: bool = False, chunk_accesses=None):
+        resume: bool = False, chunk_accesses=None, sched=None):
     n_ops = 8_000 if quick else 25_000
     lat = SystemLatencies()
     rc = run_config("fig9", resume=resume, chunk_accesses=chunk_accesses)
@@ -48,7 +48,8 @@ def run(quick: bool = False, kernel_mode: str = "auto",
         cfgs.append(SystemSimConfig(
             cache=CACHE, accel_tlb=None, mem_tlb=MEM_TLB, num_partitions=P))
         evs, metas[f"system-{w}"] = run_sweep_system(
-            tr.lines, cfgs, kernel_mode=kernel_mode, run=rc, name=f"system-{w}")
+            tr.lines, cfgs, kernel_mode=kernel_mode, run=rc, name=f"system-{w}",
+            sched=sched)
 
         base = cpi.evaluate_design("conventional", evs[0], lat, instr_per_access=ipa)
         line = []

@@ -21,6 +21,7 @@ here, then the ReFrame-style tolerance-band regression gate in
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -203,24 +204,37 @@ def _append_bench_entry(entry: dict) -> None:
     (device_kind / platform / device_count / jax_version / schema_version).
     A corrupt history file raises instead of being silently overwritten —
     the file is the repo's entire perf trajectory.
+
+    The read-modify-write cycle runs under an advisory file lock and commits
+    via tmp + ``os.replace``, so two concurrent bench runs (e.g. scheduler
+    workers, or parallel CI jobs on one host) serialize their appends instead
+    of losing one, and a reader never observes a torn file.
     """
-    hist = {"history": []}
-    if BENCH_SWEEP_PATH.exists():
-        try:
-            prior = json.loads(BENCH_SWEEP_PATH.read_text())
-        except json.JSONDecodeError as e:
-            raise RuntimeError(
-                f"{BENCH_SWEEP_PATH} exists but is not valid JSON ({e}); "
-                f"refusing to overwrite the recorded perf history — restore "
-                f"it from git (or delete it deliberately) and re-run"
-            ) from e
-        if not isinstance(prior, dict):
-            raise RuntimeError(
-                f"{BENCH_SWEEP_PATH} is valid JSON but not the expected "
-                f"{{'history': [...]}} document; refusing to overwrite it")
-        hist = prior
-    hist.setdefault("history", []).append({**benchtime.device_metadata(), **entry})
-    BENCH_SWEEP_PATH.write_text(json.dumps(hist, indent=1))
+    from repro.checkpoint.checkpoint import file_lock
+
+    lock = BENCH_SWEEP_PATH.with_name(BENCH_SWEEP_PATH.name + ".lock")
+    with file_lock(lock):
+        hist = {"history": []}
+        if BENCH_SWEEP_PATH.exists():
+            try:
+                prior = json.loads(BENCH_SWEEP_PATH.read_text())
+            except json.JSONDecodeError as e:
+                raise RuntimeError(
+                    f"{BENCH_SWEEP_PATH} exists but is not valid JSON ({e}); "
+                    f"refusing to overwrite the recorded perf history — restore "
+                    f"it from git (or delete it deliberately) and re-run"
+                ) from e
+            if not isinstance(prior, dict):
+                raise RuntimeError(
+                    f"{BENCH_SWEEP_PATH} is valid JSON but not the expected "
+                    f"{{'history': [...]}} document; refusing to overwrite it")
+            hist = prior
+        hist.setdefault("history", []).append(
+            {**benchtime.device_metadata(), **entry})
+        tmp = BENCH_SWEEP_PATH.with_name(
+            f"{BENCH_SWEEP_PATH.name}.tmp-{os.getpid()}")
+        tmp.write_text(json.dumps(hist, indent=1))
+        os.replace(tmp, BENCH_SWEEP_PATH)
 
 
 def _sweep_bench(quick: bool):

@@ -8,13 +8,26 @@ spans, a throughput timeline (chunk-by-chunk accesses/s against the run's
 monotonic clock), and the structured-event table (retries, halves,
 downgrades, resumes, preemptions, checkpoint writes).
 
-``--diff A B`` compares two logs phase-by-phase and engine-by-engine —
-the before/after view for a perf change or a backend downgrade.
+Sharded scheduler runs write one log per *worker process*
+(``<run>-wN-<pid>.jsonl``) beside the parent's: a positional argument may be
+a **comma-joined group** (``fig11.jsonl,fig11-w0-123.jsonl,...``) and the
+group is merged into one record stream ordered by ``t_mono`` before
+rendering — the interleaved cross-process view of a run.  ``--merge``
+instead merges *all* positional logs into a single set.  A merged run with
+scheduler activity additionally prints the shard table (per-shard attempts,
+workers, wall time) and the scheduler event sequence (lease acquisitions
+and expiries, re-dispatches, duplicates, quarantines).
+
+``--diff A B`` compares two logs — or two comma-joined merged groups —
+phase-by-phase and engine-by-engine: the before/after view for a perf
+change, a backend downgrade, or a 1-worker vs N-worker run.
 
 ``--fail-on-event NAMES`` (comma-separated) exits 1 if any named event
-occurs in any log: CI runs it with ``--fail-on-event downgrade`` so a
-silent backend downgrade on a runner that should handle the load turns
-into a red build instead of a slow green one.
+occurs in any log or merged group: CI runs it with ``--fail-on-event
+downgrade`` so a silent backend downgrade on a runner that should handle
+the load turns into a red build instead of a slow green one (and the
+fault-injection smoke asserts ``lease_expire``/``redispatch`` *are*
+present the same way, via :func:`event_counts`).
 
 Deliberately stdlib-only (reads what :mod:`repro.runtime.telemetry` wrote;
 never imports jax) so it runs anywhere the logs land, CI artifact viewers
@@ -47,6 +60,19 @@ def load_log(path: pathlib.Path) -> List[dict]:
                 f"{path}:{i + 1}: corrupt record mid-log (only the final "
                 f"line may be torn)")
     return recs
+
+
+def merge_logs(rec_sets: List[List[dict]]) -> List[dict]:
+    """Merge several run logs into one record stream ordered by ``t_mono``.
+
+    Worker processes share the parent's monotonic clock domain (same host,
+    ``time.perf_counter``), so a global sort reconstructs the interleaved
+    timeline.  Records without ``t_mono`` sort first, keeping their original
+    relative order (stable sort).
+    """
+    merged = [r for recs in rec_sets for r in recs]
+    merged.sort(key=lambda r: r.get("t_mono", float("-inf")))
+    return merged
 
 
 def phase_breakdown(recs: List[dict]) -> Dict[str, dict]:
@@ -97,6 +123,32 @@ def throughput_timeline(recs: List[dict]) -> List[dict]:
     return rows
 
 
+def shard_table(recs: List[dict]) -> Dict[Tuple[str, int], dict]:
+    """(engine-call name, shard) -> attempts / workers / total busy seconds,
+    from the scheduler's ``shard`` spans (one per attempt, any worker)."""
+    agg: Dict[Tuple[str, int], dict] = {}
+    for r in recs:
+        if r.get("kind") != "span" or r.get("name") != "shard":
+            continue
+        a = r.get("attrs", {})
+        key = (str(a.get("name", "?")), int(a.get("shard", -1)))
+        st = agg.setdefault(key, {"attempts": 0, "workers": set(),
+                                  "total_s": 0.0})
+        st["attempts"] += 1
+        st["workers"].add(a.get("worker"))
+        st["total_s"] += float(r.get("dur_s", 0.0))
+    return dict(sorted(agg.items()))
+
+
+def scheduler_events(recs: List[dict]) -> List[dict]:
+    """The scheduler's own event records (dispatch, lease_expire, redispatch,
+    straggler duplicates, quarantine, worker death/respawn), in stream
+    order."""
+    return [r for r in recs
+            if r.get("kind") == "event"
+            and r.get("attrs", {}).get("kind") == "scheduler"]
+
+
 def event_counts(recs: List[dict]) -> Dict[str, int]:
     counts: Dict[str, int] = {}
     for r in recs:
@@ -141,6 +193,29 @@ def render(path: pathlib.Path, recs: List[dict]) -> None:
                   f"accesses={st['accesses']:<9} "
                   f"rate={_fmt_rate(st['accesses_per_s'])}")
 
+    shards = shard_table(recs)
+    if shards:
+        print("  ## shards (scheduler attempts per shard)")
+        for (call, idx), st in shards.items():
+            workers = ",".join(str(w) for w in sorted(
+                st["workers"], key=lambda x: (x is None, x)))
+            print(f"    {call:<24} shard={idx:<3} attempts={st['attempts']:<2} "
+                  f"workers=[{workers}] busy={st['total_s']:.3f}s")
+    sev = scheduler_events(recs)
+    if sev:
+        print(f"  ## scheduler events ({len(sev)})")
+        t0s = next((r["t_mono"] for r in recs if r.get("kind") == "run_start"),
+                   None)
+        for r in sev:
+            a = r.get("attrs", {})
+            t = (f"{r['t_mono'] - t0s:8.2f}s"
+                 if t0s is not None and "t_mono" in r else "       ?")
+            detail = " ".join(
+                f"{k}={a[k]}" for k in ("name", "shard", "attempt", "worker",
+                                        "duplicate", "owner")
+                if k in a and a[k] is not None)
+            print(f"    {t}  {r['name']:<20} {detail}")
+
     timeline = throughput_timeline(recs)
     if timeline:
         print(f"  ## throughput timeline ({len(timeline)} chunks)")
@@ -184,19 +259,36 @@ def diff(a_path: pathlib.Path, a: List[dict],
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("logs", nargs="+", type=pathlib.Path,
-                    help="run-log JSONL files (benchmarks/_cache/runlogs/)")
+    ap.add_argument("logs", nargs="+",
+                    help="run-log JSONL files (benchmarks/_cache/runlogs/); "
+                         "a comma-joined argument is one merged group "
+                         "(parent + worker logs of a sharded run)")
     ap.add_argument("--diff", action="store_true",
-                    help="compare exactly two logs phase-by-phase")
+                    help="compare exactly two logs (or merged groups) "
+                         "phase-by-phase")
+    ap.add_argument("--merge", action="store_true",
+                    help="merge ALL given logs into one t_mono-ordered set")
     ap.add_argument("--fail-on-event", default=None, metavar="NAMES",
                     help="comma-separated event names; exit 1 if any occurs "
                          "(CI: --fail-on-event downgrade)")
     args = ap.parse_args(argv)
 
-    loaded = [(p, load_log(p)) for p in args.logs]
+    # Each positional arg is a group: one file, or comma-joined files merged
+    # by t_mono into a single record stream.
+    loaded = []
+    for spec in args.logs:
+        paths = [pathlib.Path(s) for s in spec.split(",") if s]
+        recs = merge_logs([load_log(p) for p in paths])
+        label = paths[0] if len(paths) == 1 else pathlib.Path(
+            f"{paths[0]}(+{len(paths) - 1})")
+        loaded.append((label, recs))
+    if args.merge and len(loaded) > 1:
+        label = pathlib.Path(f"{loaded[0][0]}(+{len(loaded) - 1})")
+        loaded = [(label, merge_logs([recs for _, recs in loaded]))]
+
     if args.diff:
         if len(loaded) != 2:
-            ap.error("--diff needs exactly two logs")
+            ap.error("--diff needs exactly two logs or merged groups")
         diff(*loaded[0], *loaded[1])
     else:
         for p, recs in loaded:

@@ -53,6 +53,24 @@ def main(argv=None) -> None:
     ap.add_argument("--chunk-accesses", type=int, default=None,
                     help="checkpoint-commit granularity for the crash-safe "
                          "chunked sweeps (trace accesses per chunk)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="parallel sweep workers for the sharded scheduler "
+                         "(fig5/8/9/10/11); 1 = unsharded passthrough")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shards per scheduled engine call "
+                         "(0 = auto, 2x workers)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="S",
+                    help="per-shard straggler deadline in seconds (past it, "
+                         "idle workers run a duplicate; first completion wins)")
+    ap.add_argument("--executor", default="auto",
+                    choices=("auto", "serial", "thread", "process"),
+                    help="scheduler executor (auto = thread when --workers>1)")
+    ap.add_argument("--gc", action="store_true",
+                    help="garbage-collect expired checkpoint blobs and stale "
+                         "leases under benchmarks/_cache/ckpt, then exit "
+                         "(in-progress runs — fresh leases — are kept)")
+    ap.add_argument("--gc-age-s", type=float, default=7 * 86400.0, metavar="S",
+                    help="age threshold for --gc (default: 7 days)")
     ap.add_argument("-v", action="count", default=0, dest="verbose",
                     help="DEBUG narration on stderr (repeatable)")
     ap.add_argument("--quiet", action="store_true",
@@ -62,6 +80,21 @@ def main(argv=None) -> None:
                          "(one StepTraceAnnotation per figure)")
     args = ap.parse_args(argv)
     telemetry.setup_logging(-1 if args.quiet else args.verbose)
+
+    if args.gc:
+        from benchmarks import common
+        from repro.core.scheduler import gc_checkpoints
+
+        summary = gc_checkpoints(common.CACHE / "ckpt", age_s=args.gc_age_s)
+        print(f"# gc {common.CACHE / 'ckpt'}")
+        for k in ("deleted", "kept_in_progress", "kept_young", "skipped_foreign"):
+            for p in summary[k]:
+                print(f"{k},{p}")
+        print(f"# {len(summary['deleted'])} deleted, "
+              f"{len(summary['kept_in_progress'])} in-progress kept, "
+              f"{len(summary['kept_young'])} young kept, "
+              f"{len(summary['skipped_foreign'])} foreign skipped")
+        return
 
     from benchmarks import (
         fig2_pagewalk, fig4_tlb_sensitivity, fig5_contention, fig6_pagefault,
@@ -76,6 +109,10 @@ def main(argv=None) -> None:
         "fig11": fig11_tail_latency, "kernels": kernel_bench,
     }
     chosen = args.only.split(",") if args.only else list(modules)
+
+    from benchmarks import common
+    sched = common.sched_config(workers=args.workers, shards=args.shards,
+                                deadline=args.deadline, executor=args.executor)
 
     profile_cm = contextlib.nullcontext()
     if args.profile:
@@ -94,6 +131,8 @@ def main(argv=None) -> None:
                 kwargs["resume"] = args.resume
             if "chunk_accesses" in params and args.chunk_accesses:
                 kwargs["chunk_accesses"] = args.chunk_accesses
+            if "sched" in params and sched is not None:
+                kwargs["sched"] = sched
             step_cm = contextlib.nullcontext()
             if args.profile:
                 import jax
@@ -132,6 +171,16 @@ def main(argv=None) -> None:
     # fail only if reproduction quality actually regresses.
     if claims and n_ok < len(claims) - 1:
         sys.exit(1)
+
+    # Degraded completion: a scheduled sweep quarantined at least one shard
+    # (its figure carries zero placeholder rows + a manifest in
+    # _crash_safety).  Distinct from both success (0) and failure (1) so CI
+    # and operators can tell "finished, but incomplete" apart.
+    if common.degraded_runs():
+        from repro.core.scheduler import EX_DEGRADED
+        _LOG.error("degraded run(s) with quarantined shards: %s",
+                   ", ".join(common.degraded_runs()))
+        sys.exit(EX_DEGRADED)
 
 
 if __name__ == "__main__":

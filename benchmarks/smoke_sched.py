@@ -1,0 +1,157 @@
+"""CI fault-injection smoke for the shard scheduler: SIGKILL one worker
+process mid-shard and fail unless the run survives it bit-identically.
+
+Three phases, all ``--quick`` with a small ``--chunk-accesses``:
+
+1. **Serial reference** — fig11 unsharded, start to finish; its
+   ``fig11.json`` (minus the ``_``-prefixed stamps) is the ground truth.
+2. **Sharded run + kill** — fig11 with ``--workers 2 --executor process``.
+   ``REPRO_SCHED_HOLD_S`` holds each shard's first attempt open after its
+   lease lands, giving this parent a deterministic window to read a worker
+   pid out of a lease file (``_cache/ckpt/fig11/*.lease``) and SIGKILL it —
+   a real worker death, not a simulated exception.  The run must still
+   finish with exit 0/1 (claims), *not* 79 (nothing quarantined: the dead
+   worker's shard is re-dispatched, it is not poisoned).
+3. **Verification** — the sharded run's ``fig11.json`` must equal the
+   serial reference byte-for-byte after stripping stamps, and the telemetry
+   run logs (parent + per-worker, merged by ``obs_report.merge_logs``)
+   must actually record the recovery: ``worker_dead``, ``lease_expire``
+   and ``redispatch`` scheduler events.
+
+Exit 0 on success, 1 on any miss, with a summary on stderr.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+HERE = pathlib.Path(__file__).resolve().parent
+FIG = HERE / "_cache" / "figs" / "fig11.json"
+CKPT = HERE / "_cache" / "ckpt" / "fig11"
+RUNLOGS = HERE / "_cache" / "runlogs"
+CHUNK = 4_096
+CMD = [sys.executable, "-m", "benchmarks.fig11_tail_latency", "--quick",
+       "--chunk-accesses", str(CHUNK)]
+KILL_DEADLINE_S = 600
+
+
+def _strip(payload: dict) -> dict:
+    return {k: v for k, v in payload.items() if not k.startswith("_")}
+
+
+def _clear():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    if FIG.exists():
+        FIG.unlink()
+    for p in RUNLOGS.glob("fig11-w*.jsonl"):
+        p.unlink()
+
+
+def _kill_one_worker(parent: subprocess.Popen) -> int | None:
+    """Wait for the first shard lease, then SIGKILL the worker that holds
+    it.  Returns the killed pid (None if the run finished first)."""
+    deadline = time.monotonic() + KILL_DEADLINE_S
+    while time.monotonic() < deadline:
+        if parent.poll() is not None:
+            return None
+        for lp in sorted(CKPT.glob("*.lease")) if CKPT.exists() else []:
+            try:
+                lease = json.loads(lp.read_text())
+            except (OSError, json.JSONDecodeError):
+                continue
+            pid = lease.get("pid")
+            # Never kill the parent driver: only spawned workers hold
+            # leases with a pid different from the driver's.
+            if pid and pid != parent.pid:
+                try:
+                    os.kill(pid, signal.SIGKILL)
+                except ProcessLookupError:
+                    continue
+                return pid
+        time.sleep(0.05)
+    return None
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    print("[smoke_sched] phase 1: serial reference run")
+    _clear()
+    p = subprocess.run(CMD, env=env, cwd=HERE.parent)
+    if p.returncode not in (0, 1):   # 1 = a claim out of band, still a figure
+        print(f"[smoke_sched] reference run failed (exit {p.returncode})",
+              file=sys.stderr)
+        return 1
+    reference = _strip(json.loads(FIG.read_text()))
+
+    print("[smoke_sched] phase 2: --workers 2 (process executor), "
+          "SIGKILL one worker mid-shard")
+    _clear()
+    env_kill = dict(env)
+    # Hold each shard's first attempt open so the kill lands mid-shard, and
+    # shrink the lease TTL so recovery fits a smoke-test budget.
+    env_kill["REPRO_SCHED_HOLD_S"] = "2.0"
+    env_kill["REPRO_SCHED_LEASE_TTL_S"] = "1.5"
+    env_kill["REPRO_SCHED_HEARTBEAT_S"] = "0.3"
+    child = subprocess.Popen(
+        CMD + ["--workers", "2", "--shards", "2", "--executor", "process"],
+        env=env_kill, cwd=HERE.parent)
+    pid = _kill_one_worker(child)
+    rc = child.wait(timeout=KILL_DEADLINE_S)
+    if pid is None:
+        print("[smoke_sched] FAIL: run finished before a worker lease "
+              "appeared — nothing was killed", file=sys.stderr)
+        return 1
+    print(f"[smoke_sched] killed worker pid {pid}; run exited {rc}")
+    if rc not in (0, 1):
+        print(f"[smoke_sched] sharded run exited {rc} "
+              f"(79 would mean quarantined shards)", file=sys.stderr)
+        return 1
+
+    print("[smoke_sched] phase 3: verify recovery + bit-identity")
+    sharded = _strip(json.loads(FIG.read_text()))
+    stamps = json.loads(FIG.read_text())
+    if stamps.get("_crash_safety", {}).get("quarantined_shards"):
+        print("[smoke_sched] FAIL: shards were quarantined — a killed "
+              "worker must be survived by re-dispatch, not quarantine",
+              file=sys.stderr)
+        return 1
+
+    from benchmarks import obs_report
+    logs = [RUNLOGS / "fig11.jsonl"] + sorted(RUNLOGS.glob("fig11-w*.jsonl"))
+    merged = obs_report.merge_logs([obs_report.load_log(p) for p in logs
+                                    if p.exists()])
+    counts = obs_report.event_counts(merged)
+    missing = [e for e in ("worker_dead", "lease_expire", "redispatch")
+               if not counts.get(e)]
+    if missing:
+        print(f"[smoke_sched] FAIL: merged run logs ({len(logs)} files) "
+              f"missing recovery events: {missing}; saw {counts}",
+              file=sys.stderr)
+        return 1
+    print(f"[smoke_sched] recovery recorded: "
+          + ", ".join(f"{e} x{counts[e]}"
+                      for e in ("worker_dead", "lease_expire", "redispatch")))
+
+    if sharded != reference:
+        ref_s = json.dumps(reference, sort_keys=True, indent=1).splitlines()
+        sh_s = json.dumps(sharded, sort_keys=True, indent=1).splitlines()
+        diff = [f"-{a}\n+{b}" for a, b in zip(ref_s, sh_s) if a != b]
+        print("[smoke_sched] FAIL: sharded figure differs from the serial "
+              "reference:", file=sys.stderr)
+        print("\n".join(diff[:40]), file=sys.stderr)
+        return 1
+    print("[smoke_sched] PASS: killed a worker mid-shard; fig11.json is "
+          "bit-identical to the serial run")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

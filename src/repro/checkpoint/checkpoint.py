@@ -19,6 +19,7 @@ Guarantees:
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import io
 import json
@@ -28,11 +29,17 @@ import queue
 import re
 import shutil
 import threading
+import time
 import uuid
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 import jax
 import numpy as np
+
+try:  # POSIX advisory locks; absent on some platforms (file_lock degrades)
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
 
 _SEP = "::"
 
@@ -237,6 +244,142 @@ def read_checkpoint_blob(path) -> Tuple[Dict[str, np.ndarray], dict]:
         raise CheckpointCorruptError(
             f"checkpoint {path} payload is undecodable ({e}); {refusal}") from e
     return arrays, meta
+
+
+# ---------------------------------------------------------------------------
+# Advisory file locks + shard lease files (scheduler work-queue primitives).
+#
+# A lease is a tiny JSON file that marks a shard as claimed by one worker.
+# Ownership is advisory but race-free: every acquire/refresh/release takes an
+# flock on a sibling `.lck` file, so two workers racing for the same shard
+# serialise and exactly one wins.  A lease with no heartbeat for longer than
+# its TTL is *stale* and may be broken by a new claimant — that is how work
+# owned by a SIGKILLed worker gets re-dispatched.
+# ---------------------------------------------------------------------------
+
+LEASE_FORMAT = "repro-lease-v1"
+
+
+class LeaseHeld(RuntimeError):
+    """The shard is already claimed under a fresh (non-stale) lease."""
+
+
+@contextlib.contextmanager
+def file_lock(path, *, timeout_s: float = 30.0, poll_s: float = 0.02) -> Iterator[None]:
+    """Advisory exclusive lock on ``path`` (created if absent).
+
+    Blocks up to ``timeout_s`` then raises ``TimeoutError``.  Uses
+    ``fcntl.flock`` where available; degrades to a no-op on platforms
+    without it (single-writer environments).
+    """
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    if fcntl is None:  # pragma: no cover - non-POSIX
+        yield
+        return
+    fd = os.open(str(path), os.O_RDWR | os.O_CREAT, 0o644)
+    try:
+        deadline = time.monotonic() + timeout_s
+        while True:
+            try:
+                fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                break
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(f"could not lock {path} within {timeout_s}s")
+                time.sleep(poll_s)
+        yield
+    finally:
+        try:
+            fcntl.flock(fd, fcntl.LOCK_UN)
+        finally:
+            os.close(fd)
+
+
+def _lease_lock_path(path) -> pathlib.Path:
+    path = pathlib.Path(path)
+    return path.with_name(path.name + ".lck")
+
+
+def read_lease(path) -> Optional[dict]:
+    """Return the lease dict, or None if absent/unreadable (a torn lease is
+    treated as stale-able junk, not an error)."""
+    try:
+        rec = json.loads(pathlib.Path(path).read_text())
+    except (OSError, ValueError):
+        return None
+    return rec if isinstance(rec, dict) and rec.get("format") == LEASE_FORMAT else None
+
+
+def lease_is_stale(lease: Optional[dict], *, now: Optional[float] = None) -> bool:
+    """A lease is stale once its last heartbeat is older than its TTL.
+    Unreadable/foreign leases are stale by definition."""
+    if lease is None:
+        return True
+    now = time.time() if now is None else now
+    try:
+        return (now - float(lease["ts"])) > float(lease["ttl_s"])
+    except (KeyError, TypeError, ValueError):
+        return True
+
+
+def _write_lease_locked(path, owner: str, *, ttl_s: float, **extra) -> dict:
+    rec = {
+        "format": LEASE_FORMAT,
+        "owner": owner,
+        "ts": time.time(),
+        "ttl_s": float(ttl_s),
+        **extra,
+    }
+    path = pathlib.Path(path)
+    tmp = path.with_name(f"{path.name}.tmp-{uuid.uuid4().hex[:8]}")
+    tmp.write_text(json.dumps(rec, sort_keys=True))
+    os.replace(tmp, path)
+    return rec
+
+
+def acquire_lease(path, owner: str, *, ttl_s: float, **extra) -> dict:
+    """Claim the shard lease at ``path`` for ``owner``.
+
+    Succeeds if no lease exists, the existing lease is stale (broken and
+    taken over — the dead worker's claim), or ``owner`` already holds it
+    (re-entrant refresh).  Raises :class:`LeaseHeld` otherwise.
+    """
+    path = pathlib.Path(path)
+    with file_lock(_lease_lock_path(path)):
+        cur = read_lease(path)
+        if cur is not None and cur.get("owner") != owner and not lease_is_stale(cur):
+            raise LeaseHeld(
+                f"shard lease {path.name} is held by {cur.get('owner')!r} "
+                f"(heartbeat {time.time() - float(cur.get('ts', 0)):.1f}s ago, "
+                f"ttl {cur.get('ttl_s')}s)")
+        return _write_lease_locked(path, owner, ttl_s=ttl_s, **extra)
+
+
+def refresh_lease(path, owner: str, *, ttl_s: float, **extra) -> bool:
+    """Heartbeat: re-stamp ``ts`` if ``owner`` still holds the lease.
+    Returns False (without writing) if the lease was lost — broken by
+    another claimant after this owner stalled past the TTL."""
+    path = pathlib.Path(path)
+    with file_lock(_lease_lock_path(path)):
+        cur = read_lease(path)
+        if cur is None or cur.get("owner") != owner:
+            return False
+        _write_lease_locked(path, owner, ttl_s=ttl_s, **extra)
+        return True
+
+
+def release_lease(path, owner: str) -> bool:
+    """Delete the lease if ``owner`` holds it (and sweep the lock sibling).
+    Returns True if a lease was removed."""
+    path = pathlib.Path(path)
+    with file_lock(_lease_lock_path(path)):
+        cur = read_lease(path)
+        if cur is not None and cur.get("owner") == owner:
+            with contextlib.suppress(OSError):
+                path.unlink()
+            return True
+        return False
 
 
 class AsyncCheckpointer:

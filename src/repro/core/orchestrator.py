@@ -104,6 +104,7 @@ __all__ = [
     "run_sweep_tlb",
     "run_sweep_system",
     "run_sweep_timeline",
+    "merge_throughput",
 ]
 
 # Degradation ladder, fastest first; a run enters at its resolved mode and
@@ -435,6 +436,22 @@ def _throughput_meta(agg_by_mode: dict) -> dict:
                                    if dt > 0 else None),
         }
     return out
+
+
+def merge_throughput(metas: Sequence[dict]) -> dict:
+    """Merge the ``meta["throughput"]`` stamps of several runs (the shard
+    scheduler's per-shard orchestrator runs) into one per-mode aggregate
+    with recomputed achieved rates."""
+    agg: dict = {}
+    for m in metas:
+        for mode, d in (m.get("throughput") or {}).items():
+            a = agg.setdefault(mode, {"chunks": 0, "accesses": 0,
+                                      "sim_accesses": 0, "elapsed_s": 0.0})
+            a["chunks"] += d["chunks"]
+            a["accesses"] += d["accesses"]
+            a["sim_accesses"] += d["sim_accesses"]
+            a["elapsed_s"] += d["elapsed_s"]
+    return _throughput_meta(agg)
 
 
 def _sha256_arrays(*arrays: np.ndarray) -> str:

@@ -10,10 +10,14 @@ from __future__ import annotations
 
 import dataclasses
 import errno
+import logging
 import random
 import signal
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
+
+_LOG = logging.getLogger("repro.runtime.fault_tolerance")
 
 
 @dataclasses.dataclass
@@ -66,6 +70,13 @@ class PreemptionHandler:
     through the graceful shutdown) are replaced, which is the point of
     installing a preemption handler at all.  ``uninstall()`` restores
     whatever was there before.
+
+    Off the main thread ``signal.signal`` raises ``ValueError`` by CPython
+    design — exactly where scheduler worker threads construct orchestrators.
+    Construction there is a *documented no-op with a warning*: ``requested``
+    stays drivable (the parent forwards preemption by constructing workers
+    with ``install=False`` and setting ``requested`` itself), and
+    ``uninstall()`` is safe to call.
     """
 
     SIGNALS = (signal.SIGTERM, signal.SIGINT)
@@ -73,13 +84,21 @@ class PreemptionHandler:
     def __init__(self, install: bool = True,
                  signals: Optional[Tuple[int, ...]] = None):
         self.requested = False
+        self.installed = False
         self._previous: Dict[int, object] = {}
         if install:
+            if threading.current_thread() is not threading.main_thread():
+                _LOG.warning(
+                    "PreemptionHandler constructed off the main thread "
+                    "(%s): signal handlers cannot be installed there "
+                    "(signal.signal raises ValueError); continuing as a "
+                    "no-op — forward preemption from the main thread via "
+                    "an injected handler (install=False).",
+                    threading.current_thread().name)
+                return
             for sig in (signals if signals is not None else self.SIGNALS):
-                try:
-                    self._previous[sig] = signal.signal(sig, self._on_signal)
-                except ValueError:
-                    pass  # not main thread (tests)
+                self._previous[sig] = signal.signal(sig, self._on_signal)
+            self.installed = True
 
     def _on_signal(self, signum, frame):
         self.requested = True

@@ -43,6 +43,7 @@ import json
 import logging
 import pathlib
 import sys
+import threading
 import time
 from typing import IO, Any, Dict, List, Optional, Union
 
@@ -108,6 +109,12 @@ class _NullInstrument:
 _NULL_SPAN = _NullSpan()
 _NULL_INSTRUMENT = _NullInstrument()
 
+# One lock for all counter/gauge mutation: scheduler worker threads update
+# shared instruments concurrently, and `+=` on a float is not atomic.  The
+# disabled-tracer path never reaches these (it returns _NULL_INSTRUMENT), so
+# the <2% no-op overhead guard is unaffected.
+_AGG_LOCK = threading.Lock()
+
 
 class Counter:
     """Monotonically accumulated value (e.g. simulated accesses)."""
@@ -120,8 +127,9 @@ class Counter:
         self.updates = 0
 
     def add(self, n=1):
-        self.value += n
-        self.updates += 1
+        with _AGG_LOCK:
+            self.value += n
+            self.updates += 1
         return self
 
     def summary(self) -> dict:
@@ -142,10 +150,11 @@ class Gauge:
 
     def set(self, value):
         value = float(value)
-        self.value = value
-        self.min = value if self.min is None else min(self.min, value)
-        self.max = value if self.max is None else max(self.max, value)
-        self.updates += 1
+        with _AGG_LOCK:
+            self.value = value
+            self.min = value if self.min is None else min(self.min, value)
+            self.max = value if self.max is None else max(self.max, value)
+            self.updates += 1
         return self
 
     def summary(self) -> dict:
@@ -234,21 +243,38 @@ class Tracer:
     ``active`` is the no-op gate: with no run started (the default), every
     instrument call returns a shared null object and records nothing.  The
     per-name aggregates (``summary()``) survive :meth:`end_run`, so a driver
-    can stamp the finished run's summary into its figure JSON."""
+    can stamp the finished run's summary into its figure JSON.
+
+    Thread-safety: scheduler worker *threads* share this tracer, so the
+    span stack is thread-local (each thread nests its own spans; a worker
+    span never claims another thread's span as parent) while the shared
+    registries (span stats, event counts, counters/gauges, id allocation)
+    and the JSONL sink are guarded by one re-entrant lock.  The disabled
+    path stays lock-free — the <2% no-op overhead guard still holds."""
 
     def __init__(self):
+        self._lock = threading.RLock()
+        self._tls = threading.local()
         self._reset()
 
     def _reset(self) -> None:
         self.active = False
         self.run: Optional[str] = None
         self._log: Optional[RunLog] = None
-        self._stack: List[Span] = []
+        self._tls.stack = []
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._span_stats: Dict[str, dict] = {}
         self._event_counts: Dict[str, int] = {}
         self._id = 0
+
+    @property
+    def _stack(self) -> List[Span]:
+        """This thread's open-span stack (created lazily per thread)."""
+        stack = getattr(self._tls, "stack", None)
+        if stack is None:
+            stack = self._tls.stack = []
+        return stack
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -256,38 +282,40 @@ class Tracer:
                   run: Optional[str] = None, **meta) -> "Tracer":
         """Begin a run, resetting all registries.  ``path=None`` keeps the
         run in-memory only (aggregates, no JSONL)."""
-        if self.active:
-            _LOG.warning("telemetry run %r still active; closing it to start %r",
-                         self.run, run)
-            self.end_run(error=f"superseded by run {run!r}")
-        self._reset()
-        self.run = run
-        self.active = True
-        if path is not None:
-            self._log = RunLog(path)
-        rec = {"kind": "run_start", "schema_version": SCHEMA_VERSION,
-               "run": run, **_stamp()}
-        if meta:
-            rec["meta"] = meta
-        self._emit(rec)
-        return self
+        with self._lock:
+            if self.active:
+                _LOG.warning("telemetry run %r still active; closing it to start %r",
+                             self.run, run)
+                self.end_run(error=f"superseded by run {run!r}")
+            self._reset()
+            self.run = run
+            self.active = True
+            if path is not None:
+                self._log = RunLog(path)
+            rec = {"kind": "run_start", "schema_version": SCHEMA_VERSION,
+                   "run": run, **_stamp()}
+            if meta:
+                rec["meta"] = meta
+            self._emit(rec)
+            return self
 
     def end_run(self, error: Optional[str] = None) -> dict:
         """Close the run (writing the ``run_end`` summary record) and return
         the summary.  No-op returning ``{}`` when no run is active."""
-        if not self.active:
-            return {}
-        s = self.summary()
-        rec = {"kind": "run_end", "run": self.run, **_stamp(), "summary": s}
-        if error is not None:
-            rec["error"] = str(error)
-        self._emit(rec)
-        if self._log is not None:
-            self._log.close()
-            self._log = None
-        self.active = False
-        self._stack = []
-        return s
+        with self._lock:
+            if not self.active:
+                return {}
+            s = self.summary()
+            rec = {"kind": "run_end", "run": self.run, **_stamp(), "summary": s}
+            if error is not None:
+                rec["error"] = str(error)
+            self._emit(rec)
+            if self._log is not None:
+                self._log.close()
+                self._log = None
+            self.active = False
+            del self._stack[:]
+            return s
 
     # -- instruments --------------------------------------------------------
 
@@ -311,31 +339,38 @@ class Tracer:
         """Record a point-in-time structured event (retry, downgrade, ...)."""
         if not self.active:
             return
-        self._event_counts[name] = self._event_counts.get(name, 0) + 1
-        rec = {"kind": "event", "name": name, **_stamp()}
-        if attrs:
-            rec["attrs"] = attrs
-        self._emit(rec)
+        with self._lock:
+            self._event_counts[name] = self._event_counts.get(name, 0) + 1
+            rec = {"kind": "event", "name": name, **_stamp()}
+            if attrs:
+                rec["attrs"] = attrs
+            self._emit(rec)
 
     def counter(self, name: str):
         if not self.active:
             return _NULL_INSTRUMENT
-        c = self._counters.get(name)
-        if c is None:
-            c = self._counters[name] = Counter(name)
-        return c
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name)
+            return c
 
     def gauge(self, name: str):
         if not self.active:
             return _NULL_INSTRUMENT
-        g = self._gauges.get(name)
-        if g is None:
-            g = self._gauges[name] = Gauge(name)
-        return g
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name)
+            return g
 
     def summary(self) -> dict:
         """Aggregate view of the (last) run: per-name span stats, event
         counts, counter/gauge values — the figure-JSON ``_telemetry`` base."""
+        with self._lock:
+            return self._summary_locked()
+
+    def _summary_locked(self) -> dict:
         return {
             "schema_version": SCHEMA_VERSION,
             "run": self.run,
@@ -353,24 +388,27 @@ class Tracer:
     # -- internals ----------------------------------------------------------
 
     def _next_id(self) -> int:
-        self._id += 1
-        return self._id
+        with self._lock:
+            self._id += 1
+            return self._id
 
     def _emit(self, rec: dict) -> None:
-        if self._log is not None:
-            self._log.write(rec)
+        with self._lock:
+            if self._log is not None:
+                self._log.write(rec)
 
     def _finish_span(self, name: str, dur_s: float, span_id: Optional[int],
                      parent_id: Optional[int], ts: float, attrs: dict) -> None:
-        st = self._span_stats.setdefault(name, {"count": 0, "total_s": 0.0})
-        st["count"] += 1
-        st["total_s"] += dur_s
-        rec = {"kind": "span", "name": name, "span_id": span_id,
-               "parent_id": parent_id, "ts": ts,
-               "t_mono": time.perf_counter(), "dur_s": round(dur_s, 6)}
-        if attrs:
-            rec["attrs"] = dict(attrs)
-        self._emit(rec)
+        with self._lock:
+            st = self._span_stats.setdefault(name, {"count": 0, "total_s": 0.0})
+            st["count"] += 1
+            st["total_s"] += dur_s
+            rec = {"kind": "span", "name": name, "span_id": span_id,
+                   "parent_id": parent_id, "ts": ts,
+                   "t_mono": time.perf_counter(), "dur_s": round(dur_s, 6)}
+            if attrs:
+                rec["attrs"] = dict(attrs)
+            self._emit(rec)
 
 
 _TRACER = Tracer()

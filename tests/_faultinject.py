@@ -17,6 +17,12 @@ Three seams, matching ``SweepRunConfig``'s test hooks:
 
 * :func:`corrupt_file` — post-crash disk damage: flip one payload byte or
   truncate the blob, to prove resume *refuses* rather than trusts it.
+
+Plus the shard scheduler's ``on_shard_start`` seams — picklable
+module-level classes (the spawn-based process executor ships them to
+workers): :class:`KillWorkerOnShard` (worker self-SIGKILL mid-shard),
+:class:`PoisonShard` (deterministic per-shard failure -> quarantine),
+:class:`HoldShard` (injected straggler).
 """
 from __future__ import annotations
 
@@ -72,6 +78,59 @@ def transient_faults(*, fail_modes=("pallas", "pallas_interpret"),
                 f"({engine} [{lo}:{hi}) {mode} attempt {attempt})")
 
     return hook
+
+
+class KillWorkerOnShard:
+    """Scheduler ``on_shard_start`` seam: a worker that picks up the matching
+    ``(shard, attempt)`` SIGKILLs *itself* — a deterministic stand-in for
+    "SIGKILL one worker mid-shard" with no timing race.  Module-level class
+    (not a closure) so the spawn-based process executor can pickle it.
+
+    Only meaningful with the process executor: SIGKILL from a thread would
+    take down the whole test process.
+    """
+
+    def __init__(self, shard: int, attempts=(0,)):
+        self.shard = int(shard)
+        self.attempts = tuple(attempts)
+
+    def __call__(self, shard: int, attempt: int, worker: int) -> None:
+        if shard == self.shard and attempt in self.attempts:
+            import os
+            import signal
+
+            os.kill(os.getpid(), signal.SIGKILL)
+
+
+class PoisonShard:
+    """Scheduler ``on_shard_start`` seam: the matching shard fails
+    deterministically on every attempt (a poison config — the quarantine
+    path), while all other shards run normally.  Picklable."""
+
+    def __init__(self, shard: int):
+        self.shard = int(shard)
+
+    def __call__(self, shard: int, attempt: int, worker: int) -> None:
+        if shard == self.shard:
+            raise ValueError(
+                f"poisoned shard {shard} (attempt {attempt}, worker {worker})")
+
+
+class HoldShard:
+    """Scheduler ``on_shard_start`` seam: sleep the matching shard's first
+    attempt — an injected straggler for deadline/duplicate tests.
+    Picklable."""
+
+    def __init__(self, shard: int, hold_s: float, attempts=(0,)):
+        self.shard = int(shard)
+        self.hold_s = float(hold_s)
+        self.attempts = tuple(attempts)
+
+    def __call__(self, shard: int, attempt: int, worker: int) -> None:
+        if shard == self.shard and attempt in self.attempts:
+            import time
+
+            time.sleep(self.hold_s)
 
 
 def corrupt_file(path, mode: str = "flip") -> None:

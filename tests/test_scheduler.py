@@ -1,0 +1,512 @@
+"""Fault tolerance of the sharded sweep scheduler (repro.core.scheduler).
+
+The contract under test:
+
+* **Bit-identity.**  A sharded run — any executor — merges to exactly the
+  monolithic engine's output, for all three batched engines (the engines
+  are batch-mate invariant, so splitting the config axis must not change a
+  single bit).
+* **Dead workers are survived.**  With the process executor, a worker that
+  SIGKILLs itself mid-shard stops heartbeating; the parent observes the
+  death, respawns the slot, waits out the lease TTL, re-dispatches the
+  shard, and the run still merges bit-identically with nothing quarantined.
+* **Poison shards are quarantined, not fatal.**  A shard that fails every
+  attempt is quarantined after ``max_shard_attempts``: the run *completes*,
+  the quarantined rows are zero placeholders, the manifest lands in
+  ``meta["scheduler"]["quarantined_shards"]`` and is hoisted into
+  ``crash_safety()["quarantined_shards"]``, and the healthy rows are still
+  bit-identical.
+* **Stragglers are duplicated, first completion wins**, and the loser is
+  verified bit-identical (``duplicate_verified``).
+* **Leases** (claim/contend/expire/refresh/release), **gc_checkpoints**
+  (age- and header-aware, refuses foreign files, protects in-progress
+  runs), **concurrent figure/bench writers** (advisory lock + atomic
+  replace), and the **off-main-thread PreemptionHandler no-op** round out
+  the satellite coverage.
+
+Faults come from tests/_faultinject.py's picklable ``on_shard_start``
+classes (the spawn-based process executor ships them to workers).
+"""
+import json
+import logging
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+from _faultinject import HoldShard, KillWorkerOnShard, PoisonShard
+
+from repro.checkpoint.checkpoint import (BLOB_MAGIC, LeaseHeld, acquire_lease,
+                                         file_lock, read_lease, refresh_lease,
+                                         release_lease)
+from repro.core.orchestrator import SweepRunConfig
+from repro.core.scheduler import (EX_DEGRADED, ScheduleConfig, gc_checkpoints,
+                                  run_sweep_system, run_sweep_timeline,
+                                  run_sweep_tlb)
+from repro.core.sparta import SystemLatencies, TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_system, sweep_tlb
+from repro.core.timeline import TimelineConfig, TimelineSpec, sweep_timeline
+from repro.core.tlbsim import SystemSimConfig
+from repro.runtime.fault_tolerance import PreemptionHandler
+
+LAT = SystemLatencies()
+BLOCK = 128
+
+
+def _cfg(tmp_path, **kw):
+    kw.setdefault("backoff_base_s", 0.0)
+    kw.setdefault("backoff_cap_s", 0.0)
+    kw.setdefault("keep_checkpoint", True)
+    kw.setdefault("preemption", PreemptionHandler(install=False))
+    return SweepRunConfig(checkpoint_dir=str(tmp_path), **kw)
+
+
+def _sched(**kw):
+    kw.setdefault("shards", 2)
+    kw.setdefault("workers", 2)
+    kw.setdefault("executor", "thread")
+    kw.setdefault("poll_s", 0.01)
+    kw.setdefault("lease_ttl_s", 5.0)
+    kw.setdefault("heartbeat_s", 0.2)
+    return ScheduleConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# One harness per engine: run(run_cfg, sched) -> (list of arrays, meta); the
+# oracle is the monolithic engine.  4 sweep items each, so shards=2 splits
+# every engine's config axis down the middle.
+# ---------------------------------------------------------------------------
+
+def _tlb_engine():
+    rng = np.random.default_rng(7)
+    addrs = rng.integers(0, 1 << 22, 4096).astype(np.int64)
+    specs = [TLBSweepSpec(TLBConfig(entries=64, ways=4), num_partitions=p)
+             for p in (1, 4, 8, 16)]
+
+    def run(cfg, sched):
+        res, meta = run_sweep_tlb(addrs, specs, kernel_mode="reference",
+                                  block=BLOCK, run=cfg, sched=sched,
+                                  name="tlb")
+        return [res.hits], meta
+
+    oracle = [sweep_tlb(addrs, specs, kernel_mode="reference",
+                        block=BLOCK).hits]
+    return run, oracle
+
+
+def _system_engine():
+    rng = np.random.default_rng(11)
+    lines = rng.integers(0, 1 << 26, 4096).astype(np.int64)
+    cfgs = [
+        SystemSimConfig(num_partitions=8),
+        SystemSimConfig(accel_tlb=TLBConfig(entries=16, ways=4),
+                        num_partitions=4),
+        SystemSimConfig(cache=None, page_shift=21, num_partitions=32),
+        SystemSimConfig(num_partitions=2),
+    ]
+
+    def run(cfg, sched):
+        bev, meta = run_sweep_system(lines, cfgs, kernel_mode="reference",
+                                     block=BLOCK, run=cfg, sched=sched,
+                                     name="system")
+        return [bev.cache_hit, bev.accel_tlb_hit, bev.mem_tlb_hit], meta
+
+    o = sweep_system(lines, cfgs, kernel_mode="reference", block=BLOCK)
+    return run, [o.cache_hit, o.accel_tlb_hit, o.mem_tlb_hit]
+
+
+def _timeline_engine():
+    rng = np.random.default_rng(3)
+    lines_a = rng.integers(0, 1 << 24, 2048).astype(np.int64)
+    lines_b = rng.integers(0, 1 << 24, 1200).astype(np.int64)
+    ev_a = sweep_system(lines_a, [SystemSimConfig(num_partitions=8)])[0]
+    ev_b = sweep_system(lines_b, [SystemSimConfig(num_partitions=2)])[0]
+    specs = [
+        TimelineSpec(lines_a, ev_a, "sparta",
+                     cfg=TimelineConfig(mshrs=4, tlb_ports=1, dram_banks=8),
+                     num_partitions=8, num_accelerators=2),
+        TimelineSpec(lines_b, ev_b, "ideal",
+                     cfg=TimelineConfig(mshrs=2, tlb_ports=1, dram_banks=4),
+                     num_accelerators=4),
+        TimelineSpec(lines_a, ev_a, "conventional",
+                     cfg=TimelineConfig(mshrs=4, tlb_ports=1, dram_banks=8),
+                     num_accelerators=1),
+        TimelineSpec(lines_b, ev_b, "sparta",
+                     cfg=TimelineConfig(mshrs=2, tlb_ports=1, dram_banks=4),
+                     num_partitions=2, num_accelerators=2),
+    ]
+
+    def run(cfg, sched):
+        res, meta = run_sweep_timeline(specs, LAT, kernel_mode="reference",
+                                       block=BLOCK, run=cfg, sched=sched,
+                                       name="timeline")
+        return [a for r in res for a in (r.latency, r.overhead, r.done)], meta
+
+    oracle = [a for r in sweep_timeline(specs, LAT, kernel_mode="reference",
+                                        block=BLOCK)
+              for a in (r.latency, r.overhead, r.done)]
+    return run, oracle
+
+
+_BUILDERS = {"tlb": _tlb_engine, "system": _system_engine,
+             "timeline": _timeline_engine}
+_CASES = {}
+
+
+def _engine(name):
+    if name not in _CASES:   # trace + oracle built once per engine
+        _CASES[name] = _BUILDERS[name]()
+    return _CASES[name]
+
+
+def _assert_bits(got, want, ctx=""):
+    assert len(got) == len(want)
+    for i, (a, b) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(a, b, err_msg=f"{ctx} output {i}")
+
+
+def _event_names(meta):
+    return [e["event"] for e in meta["scheduler"]["events"]]
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity of the happy path, serial and threaded.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["tlb", "system", "timeline"])
+@pytest.mark.parametrize("executor,workers", [("serial", 1), ("thread", 2)])
+def test_sharded_bit_identity(tmp_path, engine, executor, workers):
+    run, oracle = _engine(engine)
+    got, meta = run(_cfg(tmp_path),
+                    _sched(executor=executor, workers=workers))
+    _assert_bits(got, oracle, f"{engine}/{executor}")
+    s = meta["scheduler"]
+    assert s["shards"] == 2 and s["executor"] == executor
+    assert not s["quarantined_shards"]
+    assert all(sm["state"] == "done" for sm in s["shard_map"])
+    assert meta["final_mode"] == "reference"
+
+
+@pytest.mark.parametrize("engine", ["tlb", "system", "timeline"])
+def test_resume_completes_from_shard_checkpoints(tmp_path, engine):
+    run, oracle = _engine(engine)
+    run(_cfg(tmp_path), _sched(executor="serial", workers=1))
+    got, meta = run(_cfg(tmp_path, resume=True),
+                    _sched(executor="serial", workers=1))
+    _assert_bits(got, oracle, f"{engine}/resume")
+    assert meta["completed_from_checkpoint"] is True
+
+
+# ---------------------------------------------------------------------------
+# Kill a worker mid-shard (process executor): lease expiry -> re-dispatch.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["tlb", "system", "timeline"])
+def test_kill_worker_redispatch(tmp_path, engine):
+    run, oracle = _engine(engine)
+    sched = _sched(executor="process", lease_ttl_s=1.0, heartbeat_s=0.2,
+                   on_shard_start=KillWorkerOnShard(0, attempts=(0,)))
+    got, meta = run(_cfg(tmp_path), sched)
+    _assert_bits(got, oracle, f"{engine}/kill")
+    names = _event_names(meta)
+    assert "worker_dead" in names
+    assert "worker_respawn" in names
+    assert "lease_expire" in names
+    assert "redispatch" in names
+    assert not meta["scheduler"]["quarantined_shards"]
+    sm0 = meta["scheduler"]["shard_map"][0]
+    assert sm0["state"] == "done" and sm0["dispatches"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# Poison shard: quarantine, zero placeholders, run completes.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["tlb", "system", "timeline"])
+def test_poison_shard_quarantine(tmp_path, engine):
+    run, oracle = _engine(engine)
+    sched = _sched(executor="serial", workers=1, max_shard_attempts=2,
+                   on_shard_start=PoisonShard(0))
+    got, meta = run(_cfg(tmp_path), sched)
+    q = meta["scheduler"]["quarantined_shards"]
+    assert len(q) == 1 and q[0]["shard"] == 0 and q[0]["failures"] == 2
+    assert "poisoned shard 0" in q[0]["errors"][-1]
+    names = _event_names(meta)
+    assert names.count("shard_failed") == 2 and "quarantine" in names
+    # Quarantined rows are zero placeholders; the healthy shard's rows are
+    # still bit-identical to the oracle.  Shard 0 covers items [0, 2).
+    lo, hi = q[0]["items"]
+    assert (lo, hi) == (0, 2)
+    if engine == "timeline":
+        # 3 arrays per spec; specs [2, 4) are the healthy ones.
+        _assert_bits(got[3 * hi:], oracle[3 * hi:], "timeline/healthy")
+        for a in got[:3 * hi]:
+            assert not np.any(a)
+    else:
+        for a, b in zip(got, oracle):
+            np.testing.assert_array_equal(a[hi:], b[hi:])
+            assert not np.any(a[:hi])
+
+
+def test_quarantine_hoisted_into_crash_safety(tmp_path):
+    from benchmarks import common
+
+    run, _ = _engine("tlb")
+    _, meta = run(_cfg(tmp_path),
+                  _sched(executor="serial", workers=1, max_shard_attempts=1,
+                         on_shard_start=PoisonShard(1)))
+    before = list(common._DEGRADED_RUNS)
+    try:
+        common._DEGRADED_RUNS.clear()
+        cs = common.crash_safety({"tlb": meta})
+        assert cs["quarantined_shards"]["tlb"][0]["shard"] == 1
+        assert cs["tlb"]["scheduler"]["shards"] == 2
+        assert "quarantine" in cs["tlb"]["scheduler"]["events"]
+        assert common.degraded_runs(), "degraded run not registered"
+    finally:
+        common._DEGRADED_RUNS[:] = before
+    assert EX_DEGRADED == 79   # distinct from EX_TEMPFAIL (75) and 0/1
+
+
+def test_clean_run_has_empty_quarantine_manifest(tmp_path):
+    from benchmarks import common
+
+    run, _ = _engine("tlb")
+    _, meta = run(_cfg(tmp_path), _sched(executor="serial", workers=1))
+    cs = common.crash_safety({"tlb": meta})
+    assert cs["quarantined_shards"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Straggler duplication: first completion wins, loser verified identical.
+# ---------------------------------------------------------------------------
+
+def test_straggler_duplicate_first_wins(tmp_path):
+    run, oracle = _engine("tlb")
+    sched = _sched(deadline_s=0.2,
+                   on_shard_start=HoldShard(0, 2.5, attempts=(0,)))
+    t0 = time.monotonic()
+    got, meta = run(_cfg(tmp_path), sched)
+    _assert_bits(got, oracle, "tlb/straggler")
+    names = _event_names(meta)
+    dup = [e for e in meta["scheduler"]["events"]
+           if e["event"] == "duplicate_verified"]
+    assert dup and all(e["identical"] for e in dup)
+    straggled = [e for e in meta["scheduler"]["events"]
+                 if e["event"] == "redispatch" and e.get("reason") == "straggler"]
+    assert straggled
+    assert "quarantine" not in names
+    # The held original still reports (that is what gets verified), so the
+    # run lasts at least the hold — but the winning result came earlier.
+    assert time.monotonic() - t0 >= 2.5
+
+
+# ---------------------------------------------------------------------------
+# Lease primitives.
+# ---------------------------------------------------------------------------
+
+def test_lease_acquire_contend_release(tmp_path):
+    p = tmp_path / "shard0.lease"
+    acquire_lease(p, "owner-a", ttl_s=30.0, shard=0)
+    lease = read_lease(p)
+    assert lease["owner"] == "owner-a" and lease["shard"] == 0
+    with pytest.raises(LeaseHeld):
+        acquire_lease(p, "owner-b", ttl_s=30.0)
+    # Re-acquire by the same owner refreshes instead of raising.
+    acquire_lease(p, "owner-a", ttl_s=30.0)
+    assert refresh_lease(p, "owner-a", ttl_s=30.0)
+    assert not refresh_lease(p, "owner-b", ttl_s=30.0)
+    assert release_lease(p, "owner-a")
+    assert read_lease(p) is None
+
+
+def test_stale_lease_is_broken(tmp_path):
+    p = tmp_path / "shard0.lease"
+    acquire_lease(p, "dead-worker", ttl_s=0.05, shard=0)
+    time.sleep(0.15)
+    acquire_lease(p, "owner-b", ttl_s=30.0, shard=0)   # takeover, no raise
+    assert read_lease(p)["owner"] == "owner-b"
+    # The usurped owner can no longer refresh.
+    assert not refresh_lease(p, "dead-worker", ttl_s=30.0)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent writers (satellite: locked, atomic figure/bench writes).
+# ---------------------------------------------------------------------------
+
+def test_bench_history_two_writer_stress(tmp_path, monkeypatch):
+    from benchmarks import kernel_bench
+
+    path = tmp_path / "BENCH_sweep.json"
+    monkeypatch.setattr(kernel_bench, "BENCH_SWEEP_PATH", path)
+    n_each, errors = 25, []
+
+    def writer(tag):
+        try:
+            for i in range(n_each):
+                kernel_bench._append_bench_entry(
+                    {"bench": f"{tag}-{i}", "us_per_call": float(i)})
+        except Exception as e:   # surfaces in the main thread
+            errors.append(e)
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in ("a", "b")]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors
+    hist = json.loads(path.read_text())["history"]   # never torn
+    assert len(hist) == 2 * n_each                   # no lost updates
+    assert {e["bench"] for e in hist} == {
+        f"{t}-{i}" for t in ("a", "b") for i in range(n_each)}
+
+
+def test_save_fig_two_writer_stress(tmp_path, monkeypatch):
+    from benchmarks import common
+
+    monkeypatch.setattr(common, "FIGS", tmp_path)
+    errors = []
+
+    def writer(tag):
+        try:
+            for i in range(20):
+                common.save_fig("stress", {"who": tag, "i": i})
+        except Exception as e:
+            errors.append(e)
+
+    ts = [threading.Thread(target=writer, args=(t,)) for t in ("a", "b")]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors
+    payload = json.loads((tmp_path / "stress.json").read_text())
+    assert payload["who"] in ("a", "b") and payload["i"] == 19
+    assert not list(tmp_path.glob("*.tmp-*"))   # atomic replace, no litter
+
+
+def test_file_lock_times_out(tmp_path):
+    lock = tmp_path / "x.lck"
+    with file_lock(lock):
+        with pytest.raises(TimeoutError):
+            with file_lock(lock, timeout_s=0.1):
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/lease GC.
+# ---------------------------------------------------------------------------
+
+def _age(p, age_s):
+    t = time.time() - age_s
+    os.utime(p, (t, t))
+
+
+def test_gc_checkpoints(tmp_path):
+    old = tmp_path / "done" / "old.ckpt"
+    old.parent.mkdir()
+    old.write_bytes(BLOB_MAGIC.encode() + b"\n{}")
+    _age(old, 3600)
+    young = tmp_path / "done" / "young.ckpt"
+    young.write_bytes(BLOB_MAGIC.encode() + b"\n{}")
+    foreign = tmp_path / "done" / "foreign.ckpt"
+    foreign.write_bytes(b"not-a-repro-blob")
+    _age(foreign, 3600)
+    tmpfile = tmp_path / "done" / "x.ckpt.tmp-123"
+    tmpfile.write_bytes(b"partial")
+    _age(tmpfile, 3600)
+    # An in-progress run: fresh lease protects its (old) blob.
+    live = tmp_path / "live" / "shard.ckpt"
+    live.parent.mkdir()
+    live.write_bytes(BLOB_MAGIC.encode() + b"\n{}")
+    _age(live, 3600)
+    acquire_lease(tmp_path / "live" / "shard.lease", "w0", ttl_s=300.0)
+    # A stale lease from a dead run.
+    acquire_lease(tmp_path / "done" / "dead.lease", "w1", ttl_s=0.01)
+    time.sleep(0.05)
+
+    dry = gc_checkpoints(tmp_path, age_s=600.0, dry_run=True)
+    assert old.exists() and str(old) in dry["deleted"]
+
+    summary = gc_checkpoints(tmp_path, age_s=600.0)
+    assert not old.exists() and not tmpfile.exists()
+    assert young.exists() and str(young) in summary["kept_young"]
+    assert foreign.exists() and str(foreign) in summary["skipped_foreign"]
+    assert live.exists() and str(live) in summary["kept_in_progress"]
+    assert not (tmp_path / "done" / "dead.lease").exists()
+    assert (tmp_path / "live" / "shard.lease").exists()
+
+
+# ---------------------------------------------------------------------------
+# PreemptionHandler off the main thread: documented no-op + warning.
+# ---------------------------------------------------------------------------
+
+def test_preemption_handler_off_main_thread_is_noop(caplog):
+    box = {}
+
+    def build():
+        with caplog.at_level(logging.WARNING,
+                             logger="repro.runtime.fault_tolerance"):
+            box["h"] = PreemptionHandler(install=True)
+
+    t = threading.Thread(target=build)
+    t.start()
+    t.join()
+    h = box["h"]
+    assert h.installed is False
+    assert not h.requested
+    h.uninstall()   # must be safe even though nothing was installed
+    assert any("off the main thread" in r.message for r in caplog.records)
+    # The documented forwarding path still works: requested stays drivable.
+    h.requested = True
+    assert h.requested
+
+
+def test_preemption_handler_main_thread_installs():
+    h = PreemptionHandler(install=True)
+    try:
+        assert h.installed is True
+    finally:
+        h.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# obs_report merging.
+# ---------------------------------------------------------------------------
+
+def test_obs_report_merge_groups(tmp_path, capsys):
+    from benchmarks import obs_report
+
+    def rec(kind, t, **kw):
+        return json.dumps({"kind": kind, "t_mono": t, **kw})
+
+    parent = tmp_path / "fig.jsonl"
+    parent.write_text("\n".join([
+        rec("run_start", 0.0, run="fig", meta={}),
+        rec("event", 1.0, name="dispatch",
+            attrs={"kind": "scheduler", "shard": 0}),
+        rec("run_end", 9.0, run="fig"),
+    ]) + "\n")
+    worker = tmp_path / "fig-w0-1.jsonl"
+    worker.write_text("\n".join([
+        rec("run_start", 0.5, run="fig-w0", meta={}),
+        rec("span", 2.0, name="shard", dur_s=1.5,
+            attrs={"shard": 0, "attempt": 0, "worker": 0, "name": "tlb.s0"}),
+        rec("event", 2.1, name="downgrade", attrs={}),
+        rec("run_end", 8.0, run="fig-w0"),
+    ]) + "\n")
+
+    merged = obs_report.merge_logs(
+        [obs_report.load_log(parent), obs_report.load_log(worker)])
+    assert [r["t_mono"] for r in merged] == sorted(r["t_mono"] for r in merged)
+    assert obs_report.shard_table(merged)[("tlb.s0", 0)]["attempts"] == 1
+    assert len(obs_report.scheduler_events(merged)) == 1
+
+    # Comma-joined group renders as one merged run...
+    assert obs_report.main([f"{parent},{worker}"]) == 0
+    out = capsys.readouterr().out
+    assert "shards (scheduler" in out and "scheduler events" in out
+    # ...and --fail-on-event sees events from every member of the group.
+    assert obs_report.main([f"{parent},{worker}",
+                            "--fail-on-event", "downgrade"]) == 1
