@@ -66,20 +66,18 @@ from repro.checkpoint.checkpoint import (
     read_checkpoint_blob,
     write_checkpoint_blob,
 )
+from repro.core import dispatch
 from repro.core.sweep import (
     BatchedSystemEvents,
     BatchedTLBResult,
     SystemSweepStream,
     TLBSweepSpec,
     TLBSweepStream,
-    _stackdist_eligible,
     sweep_tlb,
 )
 from repro.core.timeline import TimelineResult, TimelineSpec, TimelineSweepStream
 from repro.core.tlbsim import SystemSimConfig
-from repro.kernels.common import SWEEP_MODES, VALID_MODES, resolve_mode
-from repro.kernels.system_sim import resolve_system_mode
-from repro.kernels.timeline import resolve_timeline_mode
+from repro.kernels.common import resolve_mode
 from repro.runtime import telemetry
 from repro.runtime.fault_tolerance import (
     PreemptionHandler,
@@ -142,9 +140,17 @@ class SweepRunConfig:
     simulated transient faults there; ``on_chunk_committed(chunk_idx)``
     fires after a chunk's checkpoint is durably on disk — the harness
     raises a simulated hard kill there.
+
+    ``calibration_dir`` points ``kernel_mode="auto"`` at a measured-rate
+    calibration table directory (:mod:`repro.core.dispatch`) and feeds
+    achieved rates back into it after every run.  ``None`` (the default)
+    keeps decisions on the deterministic cold-start heuristics —
+    calibration is strictly opt-in so test/library behavior never depends
+    on what a particular machine has measured.
     """
 
     checkpoint_dir: Optional[str] = None
+    calibration_dir: Optional[str] = None
     resume: bool = False
     chunk_accesses: int = 65_536
     max_retries: int = 2
@@ -167,8 +173,10 @@ class _ChunkRunner:
     def __init__(self, stream, total: int, out_names: Sequence[str],
                  out_dtypes: Sequence, run_chunk: Callable,
                  start_mode: str, cfg: SweepRunConfig, *, name: str,
-                 trace_sha: str):
+                 trace_sha: str,
+                 decision: Optional[dispatch.DispatchDecision] = None):
         self.stream = stream
+        self.decision = decision
         self.total = int(total)
         self.out_names = tuple(out_names)
         self.run_chunk = run_chunk     # (lo, hi, mode) -> tuple of [B, L]
@@ -212,6 +220,8 @@ class _ChunkRunner:
             "events": self.events,
             "chunks_committed": (self.chunks_committed if chunks_committed
                                  is None else chunks_committed),
+            "dispatch": (self.decision.to_json() if self.decision is not None
+                         else None),
         }
 
     def _write_checkpoint(self, completed: bool, *,
@@ -254,6 +264,19 @@ class _ChunkRunner:
         for nm, buf in zip(self.out_names, self.bufs):
             buf[:, :now] = arrays[f"r_{nm}"]
         self.events = list(meta.get("events", []))
+        # Resume-stickiness: the checkpointed run's DispatchDecision wins
+        # over whatever this process just decided — a calibration table that
+        # changed between runs must never flip the backend mid-stream (the
+        # resumed tail has to be bit-identical to the uninterrupted run).
+        dd = meta.get("dispatch")
+        if dd:
+            blob_dec = dispatch.DispatchDecision.from_json(dd)
+            if blob_dec.mode in LADDER:
+                self.ladder = LADDER[LADDER.index(blob_dec.mode):]
+                self.rung = 0
+            self.decision = dataclasses.replace(
+                blob_dec, reason=blob_dec.reason + " (reused from checkpoint)",
+                calibration=f"checkpoint:{blob_dec.calibration}")
         mode = meta.get("mode")
         if mode in self.ladder:   # sticky downgrade survives the restart
             self.rung = self.ladder.index(mode)
@@ -417,6 +440,8 @@ class _ChunkRunner:
             "completed_from_checkpoint": completed_from_checkpoint,
             "checkpoint": str(self.path) if self.path else None,
             "throughput": _throughput_meta(self.throughput),
+            "dispatch": (self.decision.to_json() if self.decision is not None
+                         else None),
         }
 
 
@@ -493,9 +518,11 @@ def run_sweep_tlb(
     is not resumable (``meta["resumable"] = False``).
     """
     addrs = np.asarray(addrs)
-    mode = resolve_mode(
-        kernel_mode, valid=SWEEP_MODES,
-        prefer="stackdist" if _stackdist_eligible(specs) else None)
+    store = dispatch.store_for(run.calibration_dir)
+    decision = dispatch.decide_tlb(
+        kernel_mode, specs, n_accesses=int(addrs.shape[0]), store=store)
+    dispatch.record_decision(decision, name=name)
+    mode = decision.mode
     if mode == "stackdist":
         # Monolithic, but still measured: the stackdist engine's achieved
         # accesses/s lands in meta["throughput"] (and a single whole-trace
@@ -513,11 +540,14 @@ def run_sweep_tlb(
                                 if dur > 0 else None))
         agg = {mode: {"chunks": 1, "accesses": n,
                       "sim_accesses": n * len(specs), "elapsed_s": dur}}
+        throughput = _throughput_meta(agg)
+        dispatch.observe(decision, throughput, store=store, name=name)
         return res, {"engine": "sweep_tlb", "resumable": False,
                      "start_mode": mode, "final_mode": mode, "events": [],
                      "chunks_committed": 0, "resumed_from": None,
                      "completed_from_checkpoint": False, "checkpoint": None,
-                     "throughput": _throughput_meta(agg)}
+                     "throughput": throughput,
+                     "dispatch": decision.to_json()}
 
     run, handler = _maybe_handler(run)
     try:
@@ -526,9 +556,12 @@ def run_sweep_tlb(
         runner = _ChunkRunner(
             stream, n, ("hits",), (bool,),
             lambda lo, hi, m: (stream.run_chunk(addrs[lo:hi], kernel_mode=m),),
-            mode, run, name=name, trace_sha=_sha256_arrays(addrs))
+            mode, run, name=name, trace_sha=_sha256_arrays(addrs),
+            decision=decision)
         done = runner.try_resume()
         meta = runner.meta(completed_from_checkpoint=True) if done else runner.run()
+        dispatch.observe(runner.decision, meta.get("throughput") or {},
+                         store=store, name=name)
         n0 = int(n * warmup_frac)
         return BatchedTLBResult(hits=runner.bufs[0], n_warm=n - n0), meta
     finally:
@@ -550,7 +583,10 @@ def run_sweep_system(
     ``(BatchedSystemEvents, meta)``, bit-identical to the monolithic
     engine."""
     lines = np.asarray(lines)
-    mode = resolve_system_mode(kernel_mode)
+    store = dispatch.store_for(run.calibration_dir)
+    decision = dispatch.decide_system(
+        kernel_mode, cfgs, n_accesses=int(lines.shape[0]), store=store)
+    dispatch.record_decision(decision, name=name)
     run, handler = _maybe_handler(run)
     try:
         stream = SystemSweepStream(cfgs, block=block)
@@ -559,9 +595,12 @@ def run_sweep_system(
             stream, n, ("cache_hit", "accel_tlb_hit", "mem_tlb_hit"),
             (bool, bool, bool),
             lambda lo, hi, m: stream.run_chunk(lines[lo:hi], kernel_mode=m),
-            mode, run, name=name, trace_sha=_sha256_arrays(lines))
+            decision.mode, run, name=name, trace_sha=_sha256_arrays(lines),
+            decision=decision)
         done = runner.try_resume()
         meta = runner.meta(completed_from_checkpoint=True) if done else runner.run()
+        dispatch.observe(runner.decision, meta.get("throughput") or {},
+                         store=store, name=name)
         n0 = int(n * warmup_frac)
         return BatchedSystemEvents(*runner.bufs, n_warm=n - n0), meta
     finally:
@@ -580,7 +619,12 @@ def run_sweep_timeline(
 ) -> Tuple[List[TimelineResult], dict]:
     """Crash-safe :func:`repro.core.timeline.sweep_timeline`; returns
     ``(results, meta)``, bit-identical to the monolithic engine."""
-    mode = resolve_timeline_mode(kernel_mode, batch=len(specs))
+    store = dispatch.store_for(run.calibration_dir)
+    n_acc = max((int(np.asarray(sp.lines).shape[0]) for sp in specs),
+                default=0) if specs else None
+    decision = dispatch.decide_timeline(
+        kernel_mode, batch=len(specs), n_accesses=n_acc, store=store)
+    dispatch.record_decision(decision, name=name)
     run, handler = _maybe_handler(run)
     try:
         stream = TimelineSweepStream(specs, lat, block=block)
@@ -588,10 +632,13 @@ def run_sweep_timeline(
             stream, stream.n, ("latency", "overhead", "done"),
             (np.float32, np.float32, np.float32),
             lambda lo, hi, m: stream.run_chunk(lo, hi, kernel_mode=m),
-            mode, run, name=name,
-            trace_sha=_sha256_arrays(*stream._stacked))
+            decision.mode, run, name=name,
+            trace_sha=_sha256_arrays(*stream._stacked),
+            decision=decision)
         done = runner.try_resume()
         meta = runner.meta(completed_from_checkpoint=True) if done else runner.run()
+        dispatch.observe(runner.decision, meta.get("throughput") or {},
+                         store=store, name=name)
         return stream.finalize(*runner.bufs), meta
     finally:
         if handler is not None:

@@ -77,6 +77,7 @@ from repro.checkpoint.checkpoint import (
     refresh_lease,
     release_lease,
 )
+from repro.core import dispatch
 from repro.core import orchestrator as orch
 from repro.core.orchestrator import (
     LADDER,
@@ -89,13 +90,9 @@ from repro.core.sweep import (
     BatchedSystemEvents,
     BatchedTLBResult,
     TLBSweepSpec,
-    _stackdist_eligible,
 )
 from repro.core.timeline import TimelineResult, TimelineSpec
 from repro.core.tlbsim import SystemSimConfig
-from repro.kernels.common import SWEEP_MODES, resolve_mode
-from repro.kernels.system_sim import resolve_system_mode
-from repro.kernels.timeline import resolve_timeline_mode
 from repro.runtime import telemetry
 from repro.runtime.fault_tolerance import PreemptionHandler
 
@@ -820,12 +817,15 @@ def run_sweep_tlb(
             block=block, run=run, name=name)
     addrs = np.asarray(addrs)
     specs = list(specs)
-    # Mode is resolved ONCE over the full spec set (stackdist eligibility is
-    # a property of the whole sweep) and passed concrete to every shard, so
-    # sharding can never flip the backend choice.
-    mode = resolve_mode(
-        kernel_mode, valid=SWEEP_MODES,
-        prefer="stackdist" if _stackdist_eligible(specs) else None)
+    # The dispatch decision is made ONCE over the full spec set (stackdist
+    # eligibility and calibration lookups are properties of the whole sweep)
+    # and passed concrete to every shard, so sharding can never flip the
+    # backend choice.
+    decision = dispatch.decide_tlb(
+        kernel_mode, specs, n_accesses=int(addrs.shape[0]),
+        store=dispatch.store_for(run.calibration_dir))
+    dispatch.record_decision(decision, name=name)
+    mode = decision.mode
     n = int(addrs.shape[0])
     shards, meta = _schedule(
         engine="sweep_tlb",
@@ -833,6 +833,7 @@ def run_sweep_tlb(
                                 "warmup_frac": warmup_frac, "block": block,
                                 "mode": mode},
         n_items=len(specs), mode=mode, run_cfg=run, sched=sched, name=name)
+    meta["dispatch"] = decision.to_json()
     rows = [np.zeros((sh.hi - sh.lo, n), bool) if sh.arrays is None
             else np.asarray(sh.arrays["hits"], bool)
             for sh in shards]
@@ -859,7 +860,12 @@ def run_sweep_system(
             block=block, run=run, name=name)
     lines = np.asarray(lines)
     cfgs = list(cfgs)
-    mode = resolve_system_mode(kernel_mode)
+    # Decided once globally (see run_sweep_tlb): shards get a concrete mode.
+    decision = dispatch.decide_system(
+        kernel_mode, cfgs, n_accesses=int(lines.shape[0]),
+        store=dispatch.store_for(run.calibration_dir))
+    dispatch.record_decision(decision, name=name)
+    mode = decision.mode
     n = int(lines.shape[0])
     shards, meta = _schedule(
         engine="sweep_system",
@@ -867,6 +873,7 @@ def run_sweep_system(
                                 "warmup_frac": warmup_frac, "block": block,
                                 "mode": mode},
         n_items=len(cfgs), mode=mode, run_cfg=run, sched=sched, name=name)
+    meta["dispatch"] = decision.to_json()
     cols = {}
     for nm in ("cache_hit", "accel_tlb_hit", "mem_tlb_hit"):
         cols[nm] = np.concatenate(
@@ -894,15 +901,22 @@ def run_sweep_timeline(
             specs, lat, kernel_mode=kernel_mode, block=block, run=run,
             name=name)
     specs = list(specs)
-    # Batch-aware auto resolution must see the GLOBAL batch size, not a
+    # The batch-aware decision must see the GLOBAL batch size, not a
     # shard's — otherwise a single-spec shard would flip to the scan path
     # and the merged run would not be bit-identical to the unsharded one.
-    mode = resolve_timeline_mode(kernel_mode, batch=len(specs))
+    decision = dispatch.decide_timeline(
+        kernel_mode, batch=len(specs),
+        n_accesses=max((int(np.asarray(sp.lines).shape[0]) for sp in specs),
+                       default=0),
+        store=dispatch.store_for(run.calibration_dir))
+    dispatch.record_decision(decision, name=name)
+    mode = decision.mode
     shards, meta = _schedule(
         engine="sweep_timeline",
         payload=lambda lo, hi: {"specs": specs[lo:hi], "lat": lat,
                                 "block": block, "mode": mode},
         n_items=len(specs), mode=mode, run_cfg=run, sched=sched, name=name)
+    meta["dispatch"] = decision.to_json()
     results: List[TimelineResult] = []
     for sh in shards:
         for j, g in enumerate(range(sh.lo, sh.hi)):

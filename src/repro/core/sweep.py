@@ -53,7 +53,7 @@ from typing import Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stackdist
+from repro.core import dispatch, stackdist
 from repro.core.sparta import TLBConfig
 from repro.core.tlbsim import (
     LINE_SHIFT,
@@ -65,7 +65,7 @@ from repro.core.tlbsim import (
     _scan_tlb_batched,
     padded_tlb_state,
 )
-from repro.kernels.common import SWEEP_MODES, resolve_mode
+from repro.kernels.common import resolve_mode
 from repro.kernels.system_sim import resolve_system_mode, system_sim_batched
 from repro.kernels.system_sim.ref import system_sim_batched_ref as _scan_system_batched
 from repro.runtime import telemetry
@@ -200,11 +200,11 @@ def sweep_tlb(
             "sweep_tlb batch mixes page_shift=None (VPN-stream) specs with "
             "page_shift-set (line-stream) specs; one input stream cannot be both"
         )
-    mode = resolve_mode(
-        kernel_mode,
-        valid=SWEEP_MODES,
-        prefer="stackdist" if _stackdist_eligible(specs) else None,
-    )
+    # Backend selection is the dispatch layer's job; a bare (unorchestrated)
+    # call makes a cold-start decision — the orchestrator passes calibrated,
+    # already-concrete modes down to the streams instead.
+    mode = dispatch.decide_tlb(
+        kernel_mode, specs, n_accesses=len(addrs)).mode
     if mode == "stackdist":
         hits = _sweep_tlb_stackdist(addrs, specs)
         n0 = int(hits.shape[1] * warmup_frac)
@@ -411,12 +411,6 @@ def _mapping_key(sp: TLBSweepSpec) -> Tuple[int, int, Optional[int]]:
     return sets, sp.num_partitions, sp.page_shift
 
 
-def _stackdist_eligible(specs: Sequence[TLBSweepSpec]) -> bool:
-    """Every TLBSweepSpec is a pure-LRU TLB today, so eligibility reduces to
-    the associativity staying small enough for the capped-stack state."""
-    return max(sp.cfg.effective_ways for sp in specs) <= stackdist.AUTO_MAX_WAYS
-
-
 def _sweep_tlb_stackdist(addrs: np.ndarray, specs: Sequence[TLBSweepSpec]) -> np.ndarray:
     """Hit bits [B, N] via one stack-depth pass per distinct set-mapping.
 
@@ -517,7 +511,8 @@ def sweep_system(
     """
     if not cfgs:
         raise ValueError("sweep_system needs at least one config")
-    mode = resolve_system_mode(kernel_mode)
+    mode = dispatch.decide_system(
+        kernel_mode, cfgs, n_accesses=int(lines.shape[0])).mode
 
     streams = [np.stack(rows) for rows in zip(*(_system_keys(lines, c) for c in cfgs))]
 

@@ -10,18 +10,24 @@ Every kernel package exposes ``ops.py`` with a public op that takes
 * ``"pallas_interpret"`` — the same kernel body executed by the Pallas
                            interpreter on CPU; used by the test suite to
                            validate kernels against the oracle.
-* ``"auto"``             — ``pallas`` on TPU backends, else ``reference``.
+* ``"auto"``             — resolved by :mod:`repro.core.dispatch`, the one
+                           calibrated backend-selection layer.  For a bare
+                           per-op call that is the cold-start rule
+                           (``pallas`` on TPU backends, else ``reference``);
+                           the orchestrated engines make a full
+                           :class:`~repro.core.dispatch.DispatchDecision`
+                           with per-candidate predicted rates.
 
 The trace-sweep engine (:mod:`repro.core.sweep`) accepts one extra mode on
 top of the generic four: ``"stackdist"``, the exact sort-based
 stack-distance backend (:mod:`repro.core.stackdist`).  Sweep entry points
-validate against :data:`SWEEP_MODES` and pass ``prefer="stackdist"`` so that
-``"auto"`` picks it whenever every spec is a pure-LRU TLB it can serve —
-per-op kernels keep the plain four-mode registry.
+validate against :data:`SWEEP_MODES`; whether ``"auto"`` picks it is the
+dispatch layer's call (every-spec-eligible pure-LRU TLBs) — per-op kernels
+keep the plain four-mode registry.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 
@@ -33,20 +39,20 @@ def resolve_mode(
     kernel_mode: str,
     *,
     valid: Sequence[str] = VALID_MODES,
-    prefer: Optional[str] = None,
 ) -> str:
     """Validate ``kernel_mode`` against ``valid`` and resolve ``"auto"``.
 
-    ``prefer`` names the backend ``"auto"`` should pick when the caller knows
-    a better-than-default one applies (e.g. the sweep engine preferring
-    ``"stackdist"``); explicit modes are always honoured as given.
+    Explicit modes are always honoured as given; ``"auto"`` resolves to the
+    dispatch layer's generic cold-start default (engine entry points make a
+    richer, calibrated decision through :mod:`repro.core.dispatch` before
+    their per-op calls ever see a mode).
     """
     if kernel_mode not in valid:
         raise ValueError(f"kernel_mode={kernel_mode!r}; expected one of {tuple(valid)}")
     if kernel_mode == "auto":
-        if prefer is not None:
-            return prefer
-        return "pallas" if jax.default_backend() == "tpu" else "reference"
+        from repro.core import dispatch
+
+        return dispatch.default_mode()
     return kernel_mode
 
 

@@ -41,17 +41,22 @@ def resolve_timeline_mode(kernel_mode: str, *, batch: int = 1) -> str:
 
     Sweep-only backends are rejected loudly (no silent coercion): the
     timeline is not a pure-LRU sweep, so ``"stackdist"`` cannot apply.
-    ``"auto"`` prefers the scan reference for a degenerate (single-sim)
-    batch — the 0.87x single-sequential-sim Pallas path is never
-    auto-selected — and the batched kernel otherwise (on TPU backends).
+    ``"auto"`` resolves through the dispatch layer's cold-start rule: the
+    scan reference for a degenerate (single-sim) batch — the 0.87x
+    single-sequential-sim Pallas path is never auto-selected cold — and the
+    generic backend rule otherwise (calibrated decisions happen upstream in
+    :mod:`repro.core.dispatch` before per-op calls see a mode).
     """
     if kernel_mode in SWEEP_MODES and kernel_mode not in VALID_MODES:
         raise ValueError(
             f"kernel_mode={kernel_mode!r} is a sweep_tlb/miss_ratio_curve-only "
             f"backend, not a timeline backend; the timeline engine accepts "
             f"one of {VALID_MODES}")
-    return resolve_mode(
-        kernel_mode, prefer="reference" if batch <= 1 else None)
+    if kernel_mode == "auto":
+        from repro.core import dispatch
+
+        return dispatch.cold_start_mode("sweep_timeline", batch=batch)
+    return resolve_mode(kernel_mode)
 
 
 def timeline_sim(

@@ -1,0 +1,349 @@
+"""The unified cost-model dispatch layer (repro.core.dispatch).
+
+The contract under test:
+
+* **Calibration store round-trips** with the checkpoint-blob header
+  discipline; corrupt (bit-flipped / truncated) and foreign files are
+  **refused** with :class:`CalibrationCorruptError` — never silently
+  regenerated.
+* **Cold start == the legacy heuristics**, exactly: stackdist for an
+  eligible TLB sweep, the batch-aware scan preference for the timeline,
+  "pallas on TPU else reference" everywhere else.  A half-measured table
+  (default unmeasured, or no measured rival) also stays on the cold-start
+  mode — ``pallas_interpret`` can never be chosen merely for being the only
+  thing measured.
+* **Calibrated choice is argmax measured rate** once the cold-start default
+  and at least one rival are both measured — the mechanism by which a CPU
+  host's ``"auto"`` stops selecting ``pallas_interpret`` where the scan
+  measured faster.
+* **Resume stickiness**: the DispatchDecision rides in the checkpoint blob
+  meta, so a calibration table that changed between runs cannot flip the
+  backend mid-stream — kill, recalibrate to prefer a different mode,
+  resume, and the run completes bit-identically on the original backend.
+* **GC** deletes only stale files bearing the calibration magic header;
+  fresh tables and foreign files are never touched.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from _faultinject import SimulatedKill, kill_after
+
+from repro.core import dispatch
+from repro.core.dispatch import (CalibrationCorruptError, CalibrationStore,
+                                 DispatchDecision)
+from repro.core.orchestrator import SweepRunConfig, run_sweep_tlb
+from repro.core.sparta import TLBConfig
+from repro.core.sweep import TLBSweepSpec, sweep_tlb
+from repro.core.tlbsim import SystemSimConfig
+from repro.runtime import telemetry
+from repro.runtime.fault_tolerance import PreemptionHandler
+
+BLOCK = 128
+W = dispatch.MIN_CALIB_WEIGHT  # the smallest trusted measurement weight
+
+
+def _store(tmp_path, **rates):
+    """A store for a synthetic device, pre-seeded with bN rates for
+    ``sweep_timeline`` (the engine most tests decide for)."""
+    st = CalibrationStore(tmp_path / "calib-test.json",
+                          device={"device_kind": "TestCPU"})
+    st.record_many([("sweep_timeline", mode, 8, r, 10 * W)
+                    for mode, r in rates.items()])
+    return st
+
+
+def _specs(ways):
+    return [TLBSweepSpec(TLBConfig(entries=64, ways=ways), num_partitions=p)
+            for p in (1, 8)]
+
+
+# ---------------------------------------------------------------------------
+# Store round-trip + integrity refusal.
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip_and_weighted_merge(tmp_path):
+    st = _store(tmp_path)
+    st.record("sweep_tlb", "reference", 4, 1e6, weight=2 * W)
+    st.record("sweep_tlb", "reference", 4, 2e6, weight=2 * W)
+    # A fresh store object re-reads the same table from disk.
+    st2 = CalibrationStore(st.path, device={"device_kind": "TestCPU"})
+    assert st2.rate("sweep_tlb", "reference", 4) == pytest.approx(1.5e6)
+    # Batch buckets are independent; unknown cells are None.
+    assert st2.rate("sweep_tlb", "reference", 1) is None
+    assert st2.rate("sweep_system", "reference", 4) is None
+
+
+def test_store_rate_untrusted_below_min_weight(tmp_path):
+    st = _store(tmp_path)
+    st.record("sweep_tlb", "reference", 4, 1e6, weight=W / 10)
+    assert st.rate("sweep_tlb", "reference", 4) is None  # one tiny smoke chunk
+    st.record("sweep_tlb", "reference", 4, 1e6, weight=W)
+    assert st.rate("sweep_tlb", "reference", 4) == pytest.approx(1e6)
+
+
+def test_store_old_weight_cap_keeps_table_adapting(tmp_path):
+    st = _store(tmp_path)
+    st.record("sweep_tlb", "reference", 4, 1.0, weight=1e9)
+    st.record("sweep_tlb", "reference", 4, 101.0, weight=W)
+    # Without the cap the 1e9-weight history would pin the rate at ~1.0.
+    assert st.rate("sweep_tlb", "reference", 4) == pytest.approx(
+        (1.0 * 10 + 101.0) / 11)
+
+
+def test_corrupt_table_is_refused_not_regenerated(tmp_path):
+    st = _store(tmp_path, reference=1e6)
+    data = bytearray(st.path.read_bytes())
+    data[-10] ^= 0x40  # bit-flip inside the JSON payload
+    st.path.write_bytes(bytes(data))
+    fresh = CalibrationStore(st.path, device={"device_kind": "TestCPU"})
+    with pytest.raises(CalibrationCorruptError, match="checksum"):
+        fresh.load()
+    with pytest.raises(CalibrationCorruptError):  # writes refuse too
+        fresh.record("sweep_tlb", "reference", 4, 1e6, weight=W)
+    assert b"\x40" not in b"" or st.path.exists()  # file left in place
+
+
+def test_truncated_and_foreign_tables_are_refused(tmp_path):
+    p = tmp_path / "calib-test.json"
+    p.write_text('{"rates": {}}\n')  # plain JSON: not a calibration table
+    st = CalibrationStore(p, device={"device_kind": "TestCPU"})
+    with pytest.raises(CalibrationCorruptError,
+                       match="not a repro-dispatch-calib"):
+        st.load()
+    p.write_bytes(b"no newline header at all")
+    with pytest.raises(CalibrationCorruptError):
+        st.load()
+
+
+def test_decision_json_round_trip(tmp_path):
+    st = _store(tmp_path, reference=2e6, pallas_interpret=1e5)
+    d = dispatch.decide_timeline("auto", batch=8, n_accesses=4096, store=st)
+    assert DispatchDecision.from_json(d.to_json()) == d
+    assert DispatchDecision.from_json(json.loads(json.dumps(d.to_json()))) == d
+
+
+# ---------------------------------------------------------------------------
+# Cold-start parity with the legacy heuristics.
+# ---------------------------------------------------------------------------
+
+def test_cold_start_matches_legacy_heuristics(monkeypatch):
+    import repro.kernels.common as kc
+
+    for backend, generic in (("cpu", "reference"), ("tpu", "pallas")):
+        monkeypatch.setattr(kc.jax, "default_backend", lambda b=backend: b)
+        # TLB: eligible pure-LRU sweep -> stackdist on every backend.
+        d = dispatch.decide_tlb("auto", _specs(4))
+        assert (d.mode, d.calibration) == ("stackdist", "cold_start")
+        # TLB: ways > AUTO_MAX_WAYS -> ineligible -> the generic rule, and
+        # stackdist is not even a candidate (hard shape constraint).
+        d = dispatch.decide_tlb("auto", _specs(32))
+        assert d.mode == generic and "stackdist" not in d.candidates
+        # System: the generic rule.
+        assert dispatch.decide_system(
+            "auto", [SystemSimConfig(num_partitions=8)]).mode == generic
+        # Timeline: degenerate batch -> scan everywhere; real batch -> generic.
+        assert dispatch.decide_timeline("auto", batch=1).mode == "reference"
+        assert dispatch.decide_timeline("auto", batch=8).mode == generic
+
+
+def test_explicit_mode_is_honoured_verbatim(tmp_path):
+    # Even a table that says reference is 100x faster cannot override an
+    # explicitly requested mode.
+    st = _store(tmp_path, reference=1e7, pallas_interpret=1e5)
+    d = dispatch.decide_timeline("pallas_interpret", batch=8, store=st)
+    assert (d.mode, d.calibration) == ("pallas_interpret", "explicit")
+    d = dispatch.decide_tlb("stackdist", _specs(4))
+    assert (d.mode, d.calibration) == ("stackdist", "explicit")
+
+
+def test_sweep_only_modes_still_raise_for_other_engines():
+    with pytest.raises(ValueError, match="timeline"):
+        dispatch.decide_timeline("stackdist", batch=8)
+    with pytest.raises(ValueError, match="stack"):
+        dispatch.decide_system("stackdist", [SystemSimConfig()])
+    with pytest.raises(ValueError, match="bogus"):
+        dispatch.decide_tlb("bogus", _specs(4))
+
+
+# ---------------------------------------------------------------------------
+# Calibrated choice.
+# ---------------------------------------------------------------------------
+
+def test_calibrated_choice_is_argmax_measured_rate(tmp_path, monkeypatch):
+    import repro.kernels.common as kc
+
+    monkeypatch.setattr(kc.jax, "default_backend", lambda: "cpu")
+    # The acceptance behaviour: a CPU host that measured the batched scan
+    # faster than pallas_interpret stops auto-selecting the interpreter.
+    st = _store(tmp_path, reference=1.8e6, pallas_interpret=2.7e5)
+    d = dispatch.decide_timeline("auto", batch=8, n_accesses=4096, store=st)
+    assert d.mode == "reference" and d.calibration.startswith("measured:")
+    # ...and the flip side: a genuinely faster measured rival wins.
+    st2 = _store(tmp_path / "other", reference=1e5, pallas_interpret=9e5)
+    d = dispatch.decide_timeline("auto", batch=8, n_accesses=4096, store=st2)
+    assert d.mode == "pallas_interpret"
+    # Predictions are coherent: the chosen mode has the smallest predicted_s.
+    preds = {m: c["predicted_s"] for m, c in d.candidates.items()
+             if c["predicted_s"] is not None}
+    assert min(preds, key=preds.get) == d.mode
+
+
+def test_half_measured_table_stays_on_cold_start(tmp_path, monkeypatch):
+    import repro.kernels.common as kc
+
+    monkeypatch.setattr(kc.jax, "default_backend", lambda: "cpu")
+    # Only the rival measured: without a rate for the cold-start default the
+    # comparison is vacuous — pallas_interpret is never chosen by default.
+    st = _store(tmp_path, pallas_interpret=9e9)
+    d = dispatch.decide_timeline("auto", batch=8, n_accesses=4096, store=st)
+    assert d.mode == "reference" and "not measured" in d.reason
+    # Only the default measured: nothing to compare against, same outcome.
+    st2 = _store(tmp_path / "other", reference=1e6)
+    d = dispatch.decide_timeline("auto", batch=8, n_accesses=4096, store=st2)
+    assert d.mode == "reference" and "rival" in d.reason
+
+
+def test_observe_records_achieved_rates_and_residual_events(tmp_path):
+    st = _store(tmp_path)
+    d = dispatch.decide_timeline("auto", batch=8, n_accesses=4096, store=st)
+    log = tmp_path / "run.jsonl"
+    with telemetry.run_scope(log, run="t"):
+        dispatch.record_decision(d, name="fig")
+        dispatch.observe(d, {"reference": {"sim_accesses_per_s": 5e5,
+                                           "sim_accesses": 4e6}},
+                         store=st, name="fig")
+    assert st.rate("sweep_timeline", "reference", 8) == pytest.approx(5e5)
+    kinds = [(r.get("kind"), r.get("name"))
+             for r in map(json.loads, log.read_text().splitlines())]
+    assert ("event", "dispatch") in kinds
+    assert ("event", "dispatch_residual") in kinds
+
+
+# ---------------------------------------------------------------------------
+# Resume stickiness: the checkpointed decision outlives recalibration.
+# ---------------------------------------------------------------------------
+
+def test_resume_sticks_to_checkpointed_decision(tmp_path):
+    calib = tmp_path / "calibration"
+    store = CalibrationStore.for_dir(calib)  # the orchestrator's own store
+    store.record_many([("sweep_tlb", "reference", 2, 2e6, 10 * W),
+                       ("sweep_tlb", "pallas_interpret", 2, 1e3, 10 * W)])
+    rng = np.random.default_rng(7)
+    addrs = rng.integers(0, 1 << 22, 4096).astype(np.int64)
+    specs = _specs(32)  # stackdist-ineligible -> the chunked stream path
+    oracle = sweep_tlb(addrs, specs, kernel_mode="reference", block=BLOCK).hits
+
+    def cfg(**kw):
+        return SweepRunConfig(checkpoint_dir=str(tmp_path / "ckpt"),
+                              calibration_dir=str(calib), chunk_accesses=1024,
+                              backoff_base_s=0.0, backoff_cap_s=0.0,
+                              preemption=PreemptionHandler(install=False), **kw)
+
+    with pytest.raises(SimulatedKill):
+        run_sweep_tlb(addrs, specs, kernel_mode="auto", block=BLOCK,
+                      run=cfg(on_chunk_committed=kill_after(2)), name="tlb")
+
+    # Recalibrate between runs so a *fresh* decision would flip the backend.
+    store.record_many([("sweep_tlb", "pallas_interpret", 2, 1e9, 1e9)])
+    fresh = dispatch.decide_tlb("auto", specs, n_accesses=4096, store=store)
+    assert fresh.mode == "pallas_interpret"
+
+    # Resume: the blob's decision wins — same backend, bit-identical output.
+    res, meta = run_sweep_tlb(addrs, specs, kernel_mode="auto", block=BLOCK,
+                              run=cfg(resume=True), name="tlb")
+    assert meta["final_mode"] == "reference"
+    assert meta["dispatch"]["mode"] == "reference"
+    assert meta["dispatch"]["calibration"].startswith("checkpoint:")
+    assert "reused from checkpoint" in meta["dispatch"]["reason"]
+    np.testing.assert_array_equal(res.hits, oracle)
+
+
+def test_run_meta_carries_decision_cold_and_explicit(tmp_path):
+    rng = np.random.default_rng(9)
+    addrs = rng.integers(0, 1 << 22, 1024).astype(np.int64)
+    run = SweepRunConfig(preemption=PreemptionHandler(install=False))
+    # Explicit mode: stamped as such.
+    _, meta = run_sweep_tlb(addrs, _specs(32), kernel_mode="reference",
+                            block=BLOCK, run=run, name="t")
+    assert meta["dispatch"]["calibration"] == "explicit"
+    assert meta["dispatch"]["mode"] == "reference"
+    # Cold-start auto on the monolithic stackdist path stamps too.
+    _, meta = run_sweep_tlb(addrs, _specs(4), kernel_mode="auto",
+                            block=BLOCK, run=run, name="t")
+    assert meta["dispatch"]["mode"] == "stackdist"
+    assert meta["dispatch"]["calibration"] == "cold_start"
+    assert meta["final_mode"] == "stackdist" and "throughput" in meta
+
+
+# ---------------------------------------------------------------------------
+# Bootstrap ingesters + GC.
+# ---------------------------------------------------------------------------
+
+def test_ingest_bench_entries_filters_by_device(tmp_path):
+    st = _store(tmp_path)
+    n = dispatch.ingest_bench_entries(st, [
+        {"device_kind": "TestCPU", "bench": "sweep", "n_accesses": 1e5,
+         "n_configs": 8, "t_reference_s": 0.5, "t_stackdist_s": 0.1},
+        {"device_kind": "SomeTPU", "bench": "sweep", "n_accesses": 1e5,
+         "n_configs": 8, "t_reference_s": 0.01},  # foreign device: skipped
+        {"device_kind": "TestCPU", "bench": "timeline_batched",
+         "n_accesses": 1e4, "n_sims": 12, "mode": "pallas_interpret",
+         "t_batched_s": 0.2, "t_pallas_s": 2.0},
+    ])
+    assert n == 4  # reference+stackdist from sweep, reference+interpret batched
+    assert st.rate("sweep_tlb", "reference", 8) == pytest.approx(8e5 / 0.5)
+    assert st.rate("sweep_tlb", "stackdist", 8) == pytest.approx(8e5 / 0.1)
+    assert st.rate("sweep_timeline", "reference", 12) == pytest.approx(
+        1.2e5 / 0.2)
+    assert st.rate("sweep_timeline", "pallas_interpret", 12) == pytest.approx(
+        1.2e5 / 2.0)
+
+
+def test_ingest_runlogs_reads_chunk_spans(tmp_path):
+    st = _store(tmp_path)
+    log = tmp_path / "fig.jsonl"
+    recs = [
+        {"kind": "run_start", "meta": {"device": {"device_kind": "TestCPU"}}},
+        {"kind": "span", "name": "chunk",
+         "attrs": {"engine": "sweep_system", "mode": "reference",
+                   "configs": 3, "accesses": 2048,
+                   "sim_accesses_per_s": 7e5}},
+        {"kind": "span", "name": "chunk",  # auto is never a measured mode
+         "attrs": {"engine": "sweep_system", "mode": "auto", "configs": 3,
+                   "accesses": 2048, "sim_accesses_per_s": 1e9}},
+    ]
+    log.write_text("\n".join(json.dumps(r) for r in recs) + "\n")
+    foreign = tmp_path / "foreign.jsonl"
+    foreign.write_text(json.dumps(
+        {"kind": "run_start",
+         "meta": {"device": {"device_kind": "SomeTPU"}}}) + "\n" +
+        json.dumps(recs[1]) + "\n")
+    assert dispatch.ingest_runlogs(st, [log, foreign, tmp_path / "nope"]) == 1
+    # weight 3*2048 = 6144 >= MIN_CALIB_WEIGHT -> trusted
+    assert st.rate("sweep_system", "reference", 3) == pytest.approx(7e5)
+
+
+def test_gc_sweeps_stale_tables_but_never_fresh_or_foreign(tmp_path):
+    stale = _store(tmp_path, reference=1e6)
+    fresh = CalibrationStore(tmp_path / "calib-fresh.json",
+                             device={"device_kind": "Fresh"})
+    fresh.record("sweep_tlb", "reference", 1, 1e6, weight=W)
+    foreign = tmp_path / "notes.json"
+    foreign.write_text("{}")
+    tmpfile = tmp_path / "calib-x.json.tmp-deadbeef"
+    tmpfile.write_text("torn")
+    old = 30 * 86400.0
+    for p in (stale.path, foreign, tmpfile):
+        os.utime(p, (p.stat().st_mtime - old, p.stat().st_mtime - old))
+
+    dry = dispatch.gc_calibration(tmp_path, age_s=7 * 86400.0, dry_run=True)
+    assert dry["dry_run"] and stale.path.exists()
+
+    out = dispatch.gc_calibration(tmp_path, age_s=7 * 86400.0)
+    assert sorted(out["deleted"]) == sorted([str(stale.path), str(tmpfile)])
+    assert str(foreign) in out["skipped_foreign"]
+    assert not stale.path.exists() and not tmpfile.exists()
+    assert fresh.path.exists() and foreign.exists()  # never touched
+    assert str(fresh.path) in out["kept_young"]
